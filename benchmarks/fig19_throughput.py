@@ -1,0 +1,42 @@
+"""Paper Fig. 19: throughput of SOFA vs dense / FA baselines.
+
+Measured wall-clock on this host (CPU, interpret-mode kernels) for the
+attention op at prefill shapes, plus the derived speedup.  Absolute numbers
+are CPU-bound; the RATIOS carry the paper's structure (SOFA's win grows
+with S because compute scales with k·S instead of S).  TPU-projected
+numbers come from the roofline table (benchmarks/roofline.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.core import pipeline
+from repro.core.pipeline import SOFAConfig
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+    d = 64
+    for S in (512, 1024, 2048):
+        q = jax.random.normal(key, (S, d)) * 0.5
+        k = jax.random.normal(jax.random.PRNGKey(1), (S, d)) * 0.5
+        v = jax.random.normal(jax.random.PRNGKey(2), (S, d))
+
+        dense = jax.jit(functools.partial(pipeline.dense_attention,
+                                          causal=True))
+        t_dense = time_fn(dense, q, k, v)
+
+        cfg = SOFAConfig(k_frac=0.25, page=64, block_q=128, n_seg=8)
+        sofa = jax.jit(lambda q, k, v: pipeline.sofa_prefill_attention(
+            q, k, v, cfg, causal=True))
+        t_sofa = time_fn(sofa, q, k, v)
+
+        rows.append((f"fig19/dense_S{S}", t_dense, "us"))
+        rows.append((f"fig19/sofa_k25_S{S}", t_sofa,
+                     f"speedup={t_dense / t_sofa:.2f}x"))
+    return rows

@@ -1,0 +1,57 @@
+"""Roofline table builder: results/dryrun/*.json → markdown (EXPERIMENTS.md §Roofline).
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--out results/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_cells(dirpath: str = "results/dryrun") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def fmt_row(r: dict) -> str:
+    t = {"compute": r["t_compute"], "memory": r["t_memory"],
+         "collective": r["t_collective"]}
+    bound = max(t.values())
+    frac = r["t_compute"] / max(bound, 1e-12)
+    mem = r["memory"]["peak_bytes"] / 2 ** 30
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['attn']} | "
+            f"{t['compute']*1e3:.1f} | {t['memory']*1e3:.1f} | "
+            f"{t['collective']*1e3:.1f} | {r['bottleneck']} | "
+            f"{frac:.2f} | {r['useful_ratio']:.2f} | {mem:.1f} | "
+            f"{'✓' if r['fits_hbm'] else '✗'} |")
+
+
+HEADER = (
+    "| arch | shape | mesh | attn | t_comp ms | t_mem ms | t_coll ms | "
+    "bound | comp/roof | useful | peak GiB | fits |\n"
+    "|---|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/roofline.md")
+    ap.add_argument("--mesh", default=None)
+    args = ap.parse_args()
+    cells = load_cells()
+    if args.mesh:
+        cells = [c for c in cells if c["mesh"] == args.mesh]
+    lines = [HEADER] + [fmt_row(c) for c in cells]
+    text = "\n".join(lines)
+    print(text)
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(text + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Usage:
+  PYTHONPATH=src python -m benchmarks.run [--only fig17,fig20]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = [
+    "fig3_mat",
+    "fig5_fa2_overhead",
+    "fig8_dce",
+    "fig17_complexity",
+    "fig18_reduction",
+    "fig19_throughput",
+    "fig20_memory",
+    "fig21_breakdown",
+    "table2_summary",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module prefixes")
+    args = ap.parse_args()
+    only = args.only.split(",") if args.only else None
+
+    failures = []
+    print("name,us_per_call,derived")
+    for name in MODULES:
+        if only and not any(name.startswith(o) for o in only):
+            continue
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            emit(mod.run())
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            traceback.print_exc()
+    if failures:
+        print(f"# {len(failures)} benchmark modules failed:", file=sys.stderr)
+        for n, err in failures:
+            print(f"#   {n}: {err}", file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

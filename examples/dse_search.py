@@ -1,0 +1,54 @@
+"""DSE demo (paper §III-D, Alg. 1): Bayesian optimization of per-layer tile
+size B_c and top-k fraction against L = L_en + α·L_cmp + β·L_exp.
+
+  PYTHONPATH=src python examples/dse_search.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.reduced import reduced
+from repro.core import dse
+from repro.core.pipeline import SOFAConfig
+from repro.data.pipeline import SyntheticLM
+from repro.models import model as M
+
+
+def main():
+    base = reduced("llama7b")
+    key = jax.random.PRNGKey(0)
+    params = M.init_model(base, key)
+    data = SyntheticLM(base, 2, 64)
+    batch = jax.tree.map(jax.numpy.asarray, data(0))
+    S = 64
+
+    def loss_fn(bcs, k_frac):
+        # one shared (B_c, k) per layer group in this demo; page = B_c
+        page = int(max(8, min(32, bcs[0])))
+        cfg = dataclasses.replace(
+            base, attn_impl="sofa",
+            sofa=SOFAConfig(k_frac=float(k_frac), page=page, block_q=16,
+                            n_seg=max(1, 64 // page // 2)))
+        loss, _ = M.lm_loss(cfg, params, batch, remat=False)
+        return float(loss)
+
+    # paper's ranges: Tc 2–32 step 2 (Bc = S/Tc), k 5–50% step 5%
+    choices = [np.array([8.0, 16.0, 32.0])] + \
+        [np.arange(0.05, 0.55, 0.05)]
+    objective = dse.sofa_objective(
+        lambda bcs, k: loss_fn(bcs, k), S=S, alpha=0.24, beta=0.31)
+
+    res = dse.bayes_opt(objective, choices, n_init=5, n_iter=12, pool=32,
+                        seed=0)
+    print(f"[DSE] best (B_c, k) = ({int(res.best_x[0])}, "
+          f"{res.best_x[1]:.2f}) with L = {res.best_y:.4f}")
+    print(f"[DSE] explored {len(res.history)} points; "
+          f"first 3: {[(list(map(float, x)), round(y, 4)) for x, y in res.history[:3]]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end training driver: train an LM for a few hundred steps with the
+full production stack (sharded step, async checkpoints, auto-resume,
+straggler monitor, WSD/cosine schedule).
+
+Default is CPU-sized (≈1M params, 120 steps, loss visibly falls).  The
+--preset 100m configuration is the deliverable's "~100M model for a few
+hundred steps" on real hardware:
+
+  PYTHONPATH=src python examples/train_lm.py                # CPU demo
+  PYTHONPATH=src python examples/train_lm.py --preset 100m  # accelerator
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import dataclasses
+
+from repro.configs.base import get_config
+from repro.configs.reduced import reduced
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def build_cfg(preset: str):
+    if preset == "tiny":
+        return reduced("minicpm-2b"), dict(batch=8, seq=64, steps=120)
+    if preset == "100m":
+        cfg = dataclasses.replace(
+            get_config("minicpm-2b"), n_layers=8, d_model=768, n_heads=12,
+            n_kv_heads=12, d_ff=2048, vocab=32000,
+            param_dtype="float32", activ_dtype="float32")
+        return cfg, dict(batch=32, seq=1024, steps=300)
+    raise ValueError(preset)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=["tiny", "100m"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg, dims = build_cfg(args.preset)
+    steps = args.steps or dims["steps"]
+    mesh = make_host_mesh()
+    trainer = Trainer(
+        cfg, mesh, batch=dims["batch"], seq=dims["seq"],
+        tcfg=TrainerConfig(steps=steps, ckpt_dir=args.ckpt_dir,
+                           ckpt_every=max(steps // 5, 10),
+                           peak_lr=3e-3, warmup=max(steps // 20, 2),
+                           schedule="wsd", log_every=10))
+    out = trainer.run()
+    h = out["history"]
+    print(f"[train_lm] loss {h[0]:.3f} → {h[-1]:.3f} over {len(h)} steps "
+          f"({len(out['straggler_events'])} straggler events)")
+    assert h[-1] < h[0], "loss did not improve"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Import side-effects populate the config registry."""
+from repro.configs import (  # noqa: F401
+    bert_base,
+    deepseek_v2_lite_16b,
+    granite_20b,
+    llama7b,
+    llava_next_mistral_7b,
+    mamba2_780m,
+    minicpm_2b,
+    nemotron_4_15b,
+    qwen3_4b,
+    qwen3_moe_235b_a22b,
+    recurrentgemma_9b,
+    whisper_base,
+)
+
+ASSIGNED = [
+    "recurrentgemma-9b",
+    "deepseek-v2-lite-16b",
+    "qwen3-moe-235b-a22b",
+    "minicpm-2b",
+    "granite-20b",
+    "qwen3-4b",
+    "nemotron-4-15b",
+    "llava-next-mistral-7b",
+    "mamba2-780m",
+    "whisper-base",
+]
+
+PAPER_OWN = ["bert-base", "llama7b"]

@@ -1,0 +1,242 @@
+"""Config system: architectures, input shapes, and SOFA hyper-parameters.
+
+Every assigned architecture is one ``ModelConfig`` built from public specs
+(see per-file citations).  Layer structure is expressed as
+``prefix + period × n + suffix`` so homogeneous stacks lower through ONE
+``lax.scan`` body (critical for compile time and HLO size at 94 layers).
+
+Block-kind grammar: "<mixer>+<ffn>" with
+  mixer ∈ {attn, local_attn, mla, rglru, mamba, xattn}   (xattn = self+cross)
+  ffn   ∈ {mlp, gmlp, moe, none}                          (gmlp = gated MLP)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+from repro.core.pipeline import SOFAConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int
+    num_shared: int = 0
+    capacity_factor: float = 1.25
+    router_noise: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    chunk: int = 64
+    conv_width: int = 4
+    n_groups: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_rnn: int = 0          # 0 → d_model
+    conv_width: int = 4
+    c_exponent: float = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # lm | moe | hybrid | ssm | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int | None = None       # None → d_model // n_heads
+    period: tuple[str, ...] = ("attn+gmlp",)
+    prefix: tuple[str, ...] = ()    # unrolled layers before the scan
+    act: str = "silu"               # silu | gelu | relu2
+    qk_norm: bool = False
+    local_window: int | None = None
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    # family extras
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    ssm: SSMConfig | None = None
+    rglru: RGLRUConfig | None = None
+    encoder_layers: int = 0         # enc-dec: encoder depth (n_layers = dec)
+    dec_ratio: int = 1              # enc-dec: enc_seq / dec_seq
+    vision_patches: int = 576       # vlm: stub patch count per image
+    vision_dim: int = 1024          # vlm: stub patch embedding dim
+    # numerics
+    param_dtype: str = "bfloat16"
+    activ_dtype: str = "bfloat16"
+    # pad the embedding/head vocab dim to a multiple of this (0 = off) so a
+    # prime-ish vocab (minicpm's 122753) still shards vocab-parallel; logits
+    # for pad ids are masked to −inf in the loss (§Perf hillclimb cell 2)
+    vocab_pad_to: int = 0
+    # KV-cache storage dtype: "bfloat16" | "int8" (per-token-per-head scaled;
+    # halves decode cache bytes — what lets MHA archs serve 32k×128)
+    kv_cache_dtype: str = "bfloat16"
+    # the paper's technique — first-class feature
+    sofa: SOFAConfig | None = SOFAConfig()
+    attn_impl: str = "dense"        # dense | sofa | sofa_kernel
+    # citation / provenance
+    source: str = ""
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head if self.d_head is not None else self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        if not self.vocab_pad_to:
+            return self.vocab
+        return -(-self.vocab // self.vocab_pad_to) * self.vocab_pad_to
+
+    @property
+    def scan_layers(self) -> int:
+        body = self.n_layers - len(self.prefix)
+        return body // len(self.period)
+
+    @property
+    def suffix(self) -> tuple[str, ...]:
+        body = self.n_layers - len(self.prefix)
+        rem = body % len(self.period)
+        return self.period[:rem]
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.activ_dtype)
+
+    def layer_kinds(self) -> list[str]:
+        """Flattened per-layer kinds (prefix + period*scan + suffix)."""
+        return (list(self.prefix) + list(self.period) * self.scan_layers +
+                list(self.suffix))
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used by roofline MODEL_FLOPS)."""
+        d, hd = self.d_model, self.head_dim
+        n = self.vocab * d * (1 if self.tie_embeddings else 2)
+        for kind in self.layer_kinds():
+            mixer, _, ffn = kind.partition("+")
+            if mixer in ("attn", "local_attn", "xattn"):
+                n += d * hd * (self.n_heads + 2 * self.n_kv_heads)
+                n += self.n_heads * hd * d
+                if mixer == "xattn":  # cross-attention second set
+                    n += d * hd * (self.n_heads + 2 * self.n_kv_heads)
+                    n += self.n_heads * hd * d
+            elif mixer == "mla":
+                m = self.mla
+                qd = m.qk_nope_dim + m.qk_rope_dim
+                n += d * self.n_heads * qd                       # q proj
+                n += d * (m.kv_lora_rank + m.qk_rope_dim)        # kv down
+                n += m.kv_lora_rank * self.n_heads * (m.qk_nope_dim + m.v_head_dim)
+                n += self.n_heads * m.v_head_dim * d
+            elif mixer == "rglru":
+                dr = self.rglru.d_rnn or d
+                n += d * dr * 2 + dr * self.rglru.conv_width + 2 * dr * dr + dr + dr * d
+            elif mixer == "mamba":
+                s = self.ssm
+                d_in = s.expand * d
+                nheads = d_in // s.head_dim
+                n += d * (2 * d_in + 2 * s.n_groups * s.d_state + nheads)
+                n += d_in * s.conv_width + nheads * 2 + d_in * d
+            if ffn == "mlp":
+                n += 2 * d * self.d_ff
+            elif ffn == "gmlp":
+                n += 3 * d * self.d_ff
+            elif ffn == "moe":
+                e = self.moe
+                n += d * e.num_experts                           # router
+                n += (e.num_experts + e.num_shared) * 3 * d * e.d_expert
+            n += 2 * d                                           # norms
+        if self.encoder_layers:
+            per_enc = d * hd * (self.n_heads + 2 * self.n_kv_heads) + \
+                self.n_heads * hd * d + 2 * d * self.d_ff + 2 * d
+            n += self.encoder_layers * per_enc
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: only routed top-k experts)."""
+        if self.moe is None:
+            return self.param_count()
+        e = self.moe
+        dense_experts = e.top_k + e.num_shared
+        per_layer_saving = (e.num_experts - e.top_k) * 3 * self.d_model * e.d_expert
+        n_moe_layers = sum(1 for k in self.layer_kinds() if k.endswith("+moe"))
+        return int(self.param_count() - n_moe_layers * per_layer_saving)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                       # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# Architectures whose attention is sub-quadratic in S (SSM / hybrid-local):
+# only these run long_500k (system prompt: skip pure full-attention archs).
+LONG_CONTEXT_ARCHS = {"mamba2-780m", "recurrentgemma-9b"}
+
+
+_REGISTRY: dict[str, Callable[[], ModelConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    import repro.configs.all  # noqa: F401  (populate registry)
+    cfg = _REGISTRY[name]()
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def list_configs() -> list[str]:
+    import repro.configs.all  # noqa: F401
+    return sorted(_REGISTRY)
+
+
+def shape_cells(name: str) -> list[str]:
+    """The shape cells this arch runs (skips per DESIGN.md §4)."""
+    cfg = get_config(name)
+    cells = ["train_4k", "prefill_32k"]
+    if cfg.family != "encoder":
+        cells.append("decode_32k")
+    if name in LONG_CONTEXT_ARCHS:
+        cells.append("long_500k")
+    return cells

@@ -1,0 +1,24 @@
+"""bert-base — the paper's own primary NLP benchmark backbone (§V-A).
+
+[arXiv:1810.04805]  12L d_model=768 12H d_ff=3072 vocab=30522, bidirectional
+encoder.  Used by the Fig. 8 / Fig. 17 / Fig. 18 benchmark reproductions.
+Encoder-only ⇒ no decode shapes.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("bert-base")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="bert-base",
+        family="encoder",
+        n_layers=12,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=12,
+        d_ff=3072,
+        vocab=30522,
+        period=("enc_attn+mlp",),
+        act="gelu",
+        source="arXiv:1810.04805",
+    )

@@ -1,0 +1,28 @@
+"""deepseek-v2-lite-16b — MLA + MoE.  [arXiv:2405.04434; hf]
+
+27L d_model=2048 16H, MLA kv_lora=512, MoE 64 routed experts top-6 + 2
+shared (d_expert=1408); layer 0 is a dense gated MLP (first_k_dense=1,
+d_ff=10944).  SOFA prediction runs on the rank-512 latent (DESIGN.md §4).
+"""
+from repro.configs.base import MLAConfig, MoEConfig, ModelConfig, register
+
+
+@register("deepseek-v2-lite-16b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="deepseek-v2-lite-16b",
+        family="moe",
+        n_layers=27,
+        d_model=2048,
+        n_heads=16,
+        n_kv_heads=16,
+        d_ff=10944,                      # dense layer-0 MLP width
+        vocab=102400,
+        prefix=("mla+gmlp",),
+        period=("mla+moe",),
+        act="silu",
+        mla=MLAConfig(kv_lora_rank=512, qk_nope_dim=128, qk_rope_dim=64,
+                      v_head_dim=128),
+        moe=MoEConfig(num_experts=64, top_k=6, d_expert=1408, num_shared=2),
+        source="arXiv:2405.04434 / hf:deepseek-ai/DeepSeek-V2-Lite",
+    )

@@ -1,0 +1,24 @@
+"""granite-20b — dense MQA code model.  [arXiv:2405.04324; hf]
+
+52L d_model=6144 48H (MQA kv=1) d_ff=24576 vocab=49152, non-gated GELU MLP.
+kv=1 makes the SOFA predict stage a single-head K̂ — the cheapest of the pool.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("granite-20b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-20b",
+        family="dense",
+        n_layers=52,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=1,
+        d_head=128,
+        d_ff=24576,
+        vocab=49152,
+        period=("attn+mlp",),
+        act="gelu",
+        source="arXiv:2405.04324 / hf:ibm-granite/granite-20b-code-base",
+    )

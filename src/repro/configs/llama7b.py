@@ -1,0 +1,23 @@
+"""llama-7b — the paper's largest GPU benchmark model (§V, Table II latency).
+
+[arXiv:2302.13971]  32L d_model=4096 32H (MHA) d_ff=11008 vocab=32000.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("llama7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama7b",
+        family="dense",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=32,
+        d_head=128,
+        d_ff=11008,
+        vocab=32000,
+        period=("attn+gmlp",),
+        act="silu",
+        source="arXiv:2302.13971",
+    )

@@ -1,0 +1,29 @@
+"""llava-next-mistral-7b — VLM, mistral-7b backbone + anyres tiling stub.
+
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]  32L d_model=4096 32H
+(GQA kv=8) d_ff=14336 vocab=32000.  The modality frontend is a STUB per the
+assignment: ``input_specs()`` provides precomputed CLIP patch embeddings
+(vision_dim=1024, 576 patches/tile); the 2-layer MLP projector and the
+backbone are real.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("llava-next-mistral-7b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llava-next-mistral-7b",
+        family="vlm",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=14336,
+        vocab=32000,
+        period=("attn+gmlp",),
+        act="silu",
+        vision_patches=576,
+        vision_dim=1024,
+        source="hf:llava-hf/llava-v1.6-mistral-7b-hf",
+    )

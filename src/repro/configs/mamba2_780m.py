@@ -1,0 +1,29 @@
+"""mamba2-780m — SSM (state-space duality).  [arXiv:2405.21060; unverified]
+
+48L d_model=1536 (attention-free), ssm_state=128, head_dim=64, expand=2
+(d_inner=3072, 48 SSD heads), vocab=50280.  SOFA is INAPPLICABLE (no QKᵀ
+score matrix to sparsify) — implemented without the technique per the
+assignment; noted in DESIGN.md §Arch-applicability.  Runs long_500k
+(decode state is O(1) in S).
+"""
+from repro.configs.base import ModelConfig, SSMConfig, register
+
+
+@register("mamba2-780m")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-780m",
+        family="ssm",
+        n_layers=48,
+        d_model=1536,
+        n_heads=48,                 # d_inner / head_dim (SSD heads)
+        n_kv_heads=48,
+        d_ff=0,
+        vocab=50280,
+        period=("mamba",),
+        ssm=SSMConfig(d_state=128, head_dim=64, expand=2, chunk=128,
+                      conv_width=4, n_groups=1),
+        tie_embeddings=True,
+        sofa=None,
+        source="arXiv:2405.21060",
+    )

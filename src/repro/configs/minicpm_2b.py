@@ -1,0 +1,29 @@
+"""minicpm-2b — dense llama-like, WSD schedule.  [arXiv:2404.06395; hf]
+
+40L d_model=2304 36H (MHA kv=36) d_ff=5760 vocab=122753.  The WSD
+(warmup-stable-decay) schedule lives in repro/optim/schedule.py and is the
+default for this arch's training recipe.  vocab 122753 is odd ⇒ the sharding
+rules fall back (embed dim takes the model axis) — see distributed/sharding.py.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("minicpm-2b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm-2b",
+        family="dense",
+        n_layers=40,
+        d_model=2304,
+        n_heads=36,
+        n_kv_heads=36,
+        d_ff=5760,
+        vocab=122753,
+        period=("attn+gmlp",),
+        act="silu",
+        tie_embeddings=True,
+        vocab_pad_to=256,   # 122753 → 122880: vocab-parallel head shards (§Perf)
+        kv_cache_dtype="int8",  # MHA (kv=36) @ 32k×128 decode: 2.5 TB cache
+                                # bf16 → int8 halves it into HBM budget
+        source="arXiv:2404.06395 / hf:openbmb/MiniCPM-2B",
+    )

@@ -1,0 +1,24 @@
+"""nemotron-4-15b — dense GQA, squared-ReLU FFN.  [arXiv:2402.16819; unverified]
+
+32L d_model=6144 48H (GQA kv=8) d_ff=24576 vocab=256000, non-gated MLP with
+squared-ReLU activation.
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("nemotron-4-15b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="nemotron-4-15b",
+        family="dense",
+        n_layers=32,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=8,
+        d_head=128,
+        d_ff=24576,
+        vocab=256000,
+        period=("attn+mlp",),
+        act="relu2",
+        source="arXiv:2402.16819",
+    )

@@ -1,0 +1,27 @@
+"""qwen3-moe-235b-a22b — large GQA MoE.  [hf:Qwen/Qwen3-30B-A3B family; hf]
+
+94L d_model=4096 64H (GQA kv=4, head_dim 128), MoE 128 experts top-8
+(d_expert=1536), vocab=151936, qk-norm.
+"""
+from repro.configs.base import MoEConfig, ModelConfig, register
+
+
+@register("qwen3-moe-235b-a22b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-moe-235b-a22b",
+        family="moe",
+        n_layers=94,
+        d_model=4096,
+        n_heads=64,
+        n_kv_heads=4,
+        d_head=128,
+        d_ff=1536,
+        vocab=151936,
+        period=("attn+moe",),
+        act="silu",
+        qk_norm=True,
+        rope_theta=1e6,
+        moe=MoEConfig(num_experts=128, top_k=8, d_expert=1536),
+        source="hf:Qwen/Qwen3-235B-A22B",
+    )

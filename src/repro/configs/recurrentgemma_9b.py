@@ -1,0 +1,29 @@
+"""recurrentgemma-9b — RG-LRU + local attention hybrid, 1:2 ratio.
+
+[arXiv:2402.19427; unverified]  38L d_model=4096 16H (GQA kv=1) d_ff=12288
+vocab=256000, local window 2048.  Period = (R, R, A): 12 scanned periods + 2
+trailing recurrent layers.  SOFA applies to the local-attention layers only
+(DESIGN.md §4); runs long_500k (state/window are O(1) in S).
+"""
+from repro.configs.base import ModelConfig, RGLRUConfig, register
+
+
+@register("recurrentgemma-9b")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="recurrentgemma-9b",
+        family="hybrid",
+        n_layers=38,
+        d_model=4096,
+        n_heads=16,
+        n_kv_heads=1,
+        d_head=256,
+        d_ff=12288,
+        vocab=256000,
+        period=("rglru+gmlp", "rglru+gmlp", "local_attn+gmlp"),
+        act="gelu",
+        local_window=2048,
+        rglru=RGLRUConfig(d_rnn=4096, conv_width=4),
+        tie_embeddings=True,
+        source="arXiv:2402.19427",
+    )

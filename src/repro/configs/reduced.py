@@ -1,0 +1,58 @@
+"""Reduced same-family configs for CPU smoke tests.
+
+Every assigned arch gets a tiny sibling: same block wiring (period/prefix/
+suffix structure, mixer kinds, MoE/MLA/SSM/RG-LRU plumbing), small widths.
+FULL configs are only exercised via the dry-run (abstract, no allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import (MLAConfig, ModelConfig, MoEConfig,
+                                RGLRUConfig, SSMConfig, get_config)
+from repro.core.pipeline import SOFAConfig
+
+_TINY_SOFA = SOFAConfig(k_frac=0.5, page=16, block_q=16, n_seg=2, seg_len=8)
+
+
+def reduced(name: str, **overrides) -> ModelConfig:
+    cfg = get_config(name)
+    ch: dict = dict(
+        d_model=64,
+        d_ff=128,
+        vocab=256,
+        n_heads=4,
+        d_head=16,
+        param_dtype="float32",
+        activ_dtype="float32",
+        rope_theta=1e4,
+    )
+    ch["n_kv_heads"] = 1 if cfg.n_kv_heads == 1 else (
+        4 if cfg.n_kv_heads == cfg.n_heads else 2)
+    # depth: keep prefix, two scanned periods, plus any suffix pattern
+    suffix_len = len(cfg.suffix)
+    ch["n_layers"] = len(cfg.prefix) + 2 * len(cfg.period) + suffix_len
+    if cfg.encoder_layers:
+        ch["encoder_layers"] = 2
+    if cfg.moe is not None:
+        ch["moe"] = MoEConfig(num_experts=8, top_k=2, d_expert=32,
+                              num_shared=cfg.moe.num_shared)
+    if cfg.mla is not None:
+        ch["mla"] = MLAConfig(kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                              v_head_dim=16)
+    if cfg.ssm is not None:
+        ch["ssm"] = SSMConfig(d_state=16, head_dim=8, expand=2, chunk=16,
+                              conv_width=4, n_groups=1)
+        ch["n_heads"] = 16      # d_inner / head_dim = 128/8
+        ch["n_kv_heads"] = 16
+    if cfg.rglru is not None:
+        ch["rglru"] = RGLRUConfig(d_rnn=64, conv_width=4)
+    if cfg.local_window:
+        ch["local_window"] = 32
+    if cfg.family == "vlm":
+        ch["vision_patches"] = 8
+        ch["vision_dim"] = 32
+    if cfg.sofa is not None:
+        ch["sofa"] = _TINY_SOFA
+    ch.update(overrides)
+    return dataclasses.replace(cfg, **ch)

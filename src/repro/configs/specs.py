@@ -1,0 +1,73 @@
+"""input_specs(): weak-type-correct ShapeDtypeStruct stand-ins for every
+model input of every (arch × shape) cell — no device allocation.
+
+train / prefill shapes feed ``train_step`` / ``prefill_step``;
+decode shapes feed ``serve_step`` (one token against a seq_len KV cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import model as model_lib
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract batch for train/prefill kinds."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        Sd = max(1, S // cfg.dec_ratio)
+        return {
+            "frames": _sds((B, S, cfg.d_model), jnp.bfloat16),
+            "tokens": _sds((B, Sd), jnp.int32),
+            "labels": _sds((B, Sd), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        P = cfg.vision_patches
+        return {
+            "tokens": _sds((B, S - P), jnp.int32),
+            "patches": _sds((B, P, cfg.vision_dim), jnp.bfloat16),
+            "labels": _sds((B, S - P), jnp.int32),
+        }
+    return {
+        "tokens": _sds((B, S), jnp.int32),
+        "labels": _sds((B, S), jnp.int32),
+    }
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract KV/state caches for decode kinds (length = shape.seq_len)."""
+    B, S = shape.global_batch, shape.seq_len
+    enc_len = S if cfg.family == "encdec" else 0
+    caches = jax.eval_shape(
+        lambda: model_lib.init_caches(cfg, B, S, enc_len=enc_len))
+    return caches
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    B = shape.global_batch
+    spec = {
+        "token": _sds((B, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+        "caches": cache_specs(cfg, shape),
+    }
+    if cfg.family == "encdec":
+        spec["enc_out"] = _sds((B, shape.seq_len, cfg.d_model), jnp.bfloat16)
+    return spec
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return jax.eval_shape(
+        lambda: model_lib.init_model(cfg, jax.random.PRNGKey(0)))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Everything the lowered step function needs, as abstract values."""
+    if shape.is_decode:
+        return decode_specs(cfg, shape)
+    return batch_specs(cfg, shape)

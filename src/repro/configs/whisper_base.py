@@ -1,0 +1,28 @@
+"""whisper-base — encoder-decoder, conv frontend stubbed.
+
+[arXiv:2212.04356; unverified]  6L enc + 6L dec, d_model=512 8H d_ff=2048
+vocab=51865.  ``input_specs()`` provides precomputed frame embeddings (the
+conv1d×2 frontend is the assignment-mandated stub); decoder sequence length
+is enc/dec_ratio=4.  Backbone uses RoPE in place of Whisper's learned
+positions (TPU-idiomatic backbone substitution, recorded here).
+"""
+from repro.configs.base import ModelConfig, register
+
+
+@register("whisper-base")
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-base",
+        family="encdec",
+        n_layers=6,                 # decoder depth
+        encoder_layers=6,
+        d_model=512,
+        n_heads=8,
+        n_kv_heads=8,
+        d_ff=2048,
+        vocab=51865,
+        period=("xattn+mlp",),
+        act="gelu",
+        dec_ratio=4,
+        source="arXiv:2212.04356",
+    )

@@ -1,0 +1,15 @@
+"""SOFA core: the paper's contribution as composable JAX modules.
+
+Stage 1  dlzs      — log-domain multiplication-free sparsity prediction
+Stage 2  sads      — distributed (segmented) top-k with clipping
+Stage 3  sufa      — sorted-updating FlashAttention (exact, tile-anchored)
+Glue     pipeline  — cross-stage coordinated tiling (prefill/decode entries)
+Sched    rass      — reuse-aware KV fetch scheduling
+Search   dse       — Bayesian optimization over (B_c, k)
+Model    complexity— arithmetic-complexity accounting (Figs. 5/17)
+"""
+from repro.core.pipeline import (  # noqa: F401
+    SOFAConfig,
+    sofa_decode_attention,
+    sofa_prefill_attention,
+)

@@ -1,0 +1,108 @@
+"""DLZS — Differential Leading-Zero Summation sparsity prediction (paper §III-A).
+
+Two prediction phases, mirroring Fig. 7:
+
+  phase 1.1 (key prediction)      K̂ = X_q8 · W̃_k        W_k pre-stored in LZ
+                                                         form ⇒ no online LZE
+  phase 1.2 (attention prediction) Â = Q̃_16 · K̂ᵀ        Q converted to LZ (the
+                                                         "differential" side
+                                                         swaps per phase to
+                                                         stop error stacking)
+
+An operand in LZ form keeps only (sign, leading-zero count), i.e. it is the
+power-of-two magnitude sign·2^(W-LZ-1).  Multiplying by it is a shift — on the
+TPU we realize the shift as an exponent add and execute the whole predict
+matmul in 8-bit (see kernels/dlzs.py for the Pallas version; this module is
+the exact reference semantics).
+
+These estimates feed the SADS top-k stage ONLY — formal attention never sees
+them, so prediction error costs recall, not correctness.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics
+
+
+class LZWeights(NamedTuple):
+    """Pre-converted LZ-format projection weights (paper: stored K-weights)."""
+
+    sign: jax.Array  # int32 in {-1,0,1}, same shape as the dense weight
+    lz: jax.Array    # int32 leading-zero counts
+    scale: jax.Array  # scalar dequant scale
+    width: int
+
+    @property
+    def decoded(self) -> jax.Array:
+        """Dense power-of-two reconstruction sign·2^(W-lz-1)·scale."""
+        mag = numerics.lz_decode_magnitude(self.lz, self.width)
+        return self.sign.astype(jnp.float32) * mag * self.scale
+
+
+def convert_weights(w: jax.Array, width: int = numerics.W8) -> LZWeights:
+    """Offline conversion of W_k into LZ format (paper: pre-deployment)."""
+    sign, lz, scale = numerics.pow2_quantize(w, width)
+    return LZWeights(sign=sign, lz=lz, scale=jnp.asarray(scale), width=width)
+
+
+def predict_khat(x: jax.Array, wk_lz: LZWeights) -> jax.Array:
+    """Phase 1.1: estimate K̂ = X·W_k with X int8-quantized, W_k LZ-format.
+
+    x: (..., S, H) activations.  Returns float estimate of shape (..., S, d).
+    The product x_q · sign·2^e is a shift of x_q; we accumulate in f32 which
+    is bit-exact to the shift-add datapath for these ranges.
+    """
+    xq, xscale = numerics.quantize_int(x, numerics.W8)
+    khat = xq @ wk_lz.decoded  # shift-add semantics: each w is ±2^e
+    return khat * xscale
+
+
+def predict_scores(q: jax.Array, khat: jax.Array, width: int = numerics.W16,
+                   compute_dtype=jnp.float32) -> jax.Array:
+    """Phase 1.2: estimate Â = Q·K̂ᵀ with Q in LZ format (16-bit domain).
+
+    q: (..., Sq, d), khat: (..., Sk, d) — returns (..., Sq, Sk) in
+    ``compute_dtype``.  bf16 matches the prediction datapath's 16-bit
+    accumulators and halves the estimated-score HBM bytes (it is a
+    PREDICTOR — precision costs recall only).
+    """
+    qq, qscale = numerics.quantize_int(q, width)
+    sign, lz = numerics.lz_encode(qq, width)
+    qtilde = (sign.astype(jnp.float32)
+              * numerics.lz_decode_magnitude(lz, width)).astype(compute_dtype)
+    s = jax.lax.dot_general(qtilde, khat.astype(compute_dtype),
+                            (((qtilde.ndim - 1,), (khat.ndim - 1,)), ((), ())),
+                            preferred_element_type=compute_dtype)
+    return s * qscale.astype(compute_dtype)
+
+
+def predict_scores_from_kv(q: jax.Array, k: jax.Array,
+                           width: int = numerics.W16,
+                           compute_dtype=jnp.float32) -> jax.Array:
+    """Score prediction when K is already materialized (decode / cache path).
+
+    Same differential rule: only Q goes to the log domain; K is int-quantized.
+    """
+    kq, kscale = numerics.quantize_int(k, width)
+    return predict_scores(q, kq, width=width,
+                          compute_dtype=compute_dtype) * kscale.astype(compute_dtype)
+
+
+def dlzs_predict(x_kv: jax.Array, q: jax.Array, wk_lz: LZWeights) -> jax.Array:
+    """End-to-end prediction Â from raw activations (on-demand KV path).
+
+    x_kv: (..., Sk, H) token activations, q: (..., Sq, d) real queries,
+    wk_lz: LZ-format W_k of shape (H, d).  K is never densely projected — the
+    estimate K̂ exists only transiently (in VMEM in the fused kernel).
+    """
+    khat = predict_khat(x_kv, wk_lz)
+    return predict_scores(q, khat)
+
+
+def exact_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """Oracle used by tests/benchmarks: the true QKᵀ scores."""
+    return q @ jnp.swapaxes(k, -1, -2)

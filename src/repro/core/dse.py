@@ -1,0 +1,128 @@
+"""DSE — Bayesian optimization over (B_c per layer, top-k) (paper §III-D, Alg. 1).
+
+The search space (Tc ∈ {2..32 step 2}, k ∈ {5%..50% step 5%}, per layer) is
+far too large for grid search; the paper models L(R) = L_en + α·L_cmp + β·L_exp
+as a Gaussian process and optimizes with an acquisition function.  This is a
+dependency-free GP (RBF kernel, expected improvement over a sampled candidate
+pool) sufficient for the paper's few-hundred-iteration budgets.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Objective penalty terms (paper Eqs. (3)–(4)).
+# ---------------------------------------------------------------------------
+
+def l_cmp(bc_per_layer: Sequence[int], k_frac: float, S: int) -> float:
+    """Sorting-cost penalty: Σ_i (B_ci · k) / Σ_i (S · k)."""
+    return float(sum(bc * k_frac * S for bc in bc_per_layer) /
+                 max(1.0, sum(S * k_frac * S for _ in bc_per_layer)))
+
+
+def l_exp(bc_per_layer: Sequence[int], S: int) -> float:
+    """Exponential-op penalty: Σ_i (S / B_ci), normalized per layer."""
+    return float(sum(S / bc for bc in bc_per_layer) / (len(bc_per_layer) * S))
+
+
+@dataclass
+class DSEResult:
+    best_x: np.ndarray
+    best_y: float
+    history: list[tuple[np.ndarray, float]] = field(default_factory=list)
+
+
+class _GP:
+    """Minimal RBF-kernel Gaussian process with observation noise."""
+
+    def __init__(self, length_scale: float = 0.3, noise: float = 1e-4):
+        self.ls = length_scale
+        self.noise = noise
+        self.X = np.zeros((0, 0))
+        self.y = np.zeros((0,))
+        self._L = None
+        self._alpha = None
+
+    def _k(self, A: np.ndarray, B: np.ndarray) -> np.ndarray:
+        d2 = ((A[:, None, :] - B[None, :, :]) ** 2).sum(-1)
+        return np.exp(-0.5 * d2 / self.ls ** 2)
+
+    def fit(self, X: np.ndarray, y: np.ndarray) -> None:
+        self.X, self.y = X, y
+        self._ymu, self._ysd = y.mean(), max(y.std(), 1e-9)
+        yn = (y - self._ymu) / self._ysd
+        K = self._k(X, X) + self.noise * np.eye(len(X))
+        self._L = np.linalg.cholesky(K)
+        self._alpha = np.linalg.solve(self._L.T, np.linalg.solve(self._L, yn))
+
+    def predict(self, Xs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        Ks = self._k(Xs, self.X)
+        mu = Ks @ self._alpha
+        v = np.linalg.solve(self._L, Ks.T)
+        var = np.clip(1.0 - (v ** 2).sum(0), 1e-12, None)
+        return mu * self._ysd + self._ymu, np.sqrt(var) * self._ysd
+
+
+def _expected_improvement(mu: np.ndarray, sd: np.ndarray, best: float) -> np.ndarray:
+    z = (best - mu) / sd
+    Phi = 0.5 * (1 + np.vectorize(math.erf)(z / math.sqrt(2)))
+    phi = np.exp(-0.5 * z ** 2) / math.sqrt(2 * math.pi)
+    return (best - mu) * Phi + sd * phi
+
+
+def bayes_opt(eval_fn: Callable[[np.ndarray], float],
+              choices: Sequence[np.ndarray],
+              n_init: int = 8, n_iter: int = 40,
+              pool: int = 256, seed: int = 0) -> DSEResult:
+    """Minimize eval_fn over a discrete product space.
+
+    choices: per-dimension arrays of allowed values (paper: Tc steps of 2,
+    k steps of 5%).  Candidates are normalized to [0,1]^d for the GP.
+    """
+    rng = np.random.default_rng(seed)
+    dims = len(choices)
+    lo = np.array([float(c.min()) for c in choices])
+    hi = np.array([float(c.max()) for c in choices])
+    span = np.where(hi > lo, hi - lo, 1.0)
+
+    def sample(n: int) -> np.ndarray:
+        return np.stack([rng.choice(choices[d], size=n) for d in range(dims)], -1).astype(float)
+
+    def norm(X: np.ndarray) -> np.ndarray:
+        return (X - lo) / span
+
+    X = sample(n_init)
+    y = np.array([eval_fn(x) for x in X])
+    hist = list(zip(list(X), list(y)))
+    gp = _GP()
+    for _ in range(n_iter):
+        gp.fit(norm(X), y)
+        cand = sample(pool)
+        mu, sd = gp.predict(norm(cand))
+        ei = _expected_improvement(mu, sd, y.min())
+        x_next = cand[int(np.argmax(ei))]
+        y_next = eval_fn(x_next)
+        X = np.vstack([X, x_next[None]])
+        y = np.concatenate([y, [y_next]])
+        hist.append((x_next, y_next))
+    b = int(np.argmin(y))
+    return DSEResult(best_x=X[b], best_y=float(y[b]), history=hist)
+
+
+def sofa_objective(loss_fn: Callable[[Sequence[int], float], float],
+                   S: int, alpha: float, beta: float):
+    """Build L(R) = L_en + α L_cmp + β L_exp for bayes_opt.
+
+    The decision vector is [Bc_layer0, ..., Bc_layerN-1, k_frac]."""
+
+    def L(x: np.ndarray) -> float:
+        bcs = [int(b) for b in x[:-1]]
+        k = float(x[-1])
+        return (loss_fn(bcs, k) + alpha * l_cmp(bcs, k, S) + beta * l_exp(bcs, S))
+
+    return L

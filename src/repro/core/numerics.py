@@ -1,0 +1,79 @@
+"""Log-domain numeric helpers shared by the DLZS prediction stage.
+
+The paper's DLZS paradigm represents an integer x as
+
+    x = sign(x) * M * 2^(W - LZ(x)),   M in [0.5, 1)   (paper Eq. 1a)
+
+where ``LZ(x)`` is the leading-zero count of ``|x|`` at bit-width ``W``.
+Dropping the mantissa of ONE operand ("differential") turns a multiply into a
+shift of the other operand.  On TPU we realize the shift as an exponent add;
+these helpers provide the encode/decode primitives used by both the pure-jnp
+reference and the Pallas kernel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Bit-width the paper uses for the prediction operands (8-bit tokens/weights,
+# 16-bit intermediate Q).  We keep both.
+W8 = 8
+W16 = 16
+
+
+def leading_zeros(x: jax.Array, width: int) -> jax.Array:
+    """Leading-zero count of |x| interpreted as a ``width``-bit integer.
+
+    lz(0) is defined as ``width`` (an all-zero operand), so that
+    ``width - lz`` is 0 and the decoded magnitude 2^(width-lz-1) underflows to
+    the zero path handled by callers.
+    """
+    mag = jnp.abs(x).astype(jnp.int32)
+    # floor(log2(mag)) for mag >= 1;   number of significant bits = flog2 + 1.
+    flog2 = jnp.frexp(mag.astype(jnp.float32))[1] - 1  # mag ~ [0.5,1)*2^(flog2+1)
+    nbits = flog2 + 1
+    return jnp.where(mag > 0, width - nbits, width).astype(jnp.int32)
+
+
+def lz_encode(x: jax.Array, width: int = W8):
+    """Encode x into (sign, lz) — the paper's LZE output.
+
+    Returns ``sign`` in {-1, 0, +1} and ``lz`` in [0, width].
+    """
+    sign = jnp.sign(x).astype(jnp.int32)
+    return sign, leading_zeros(x, width)
+
+
+def lz_decode_magnitude(lz: jax.Array, width: int) -> jax.Array:
+    """Magnitude estimate 2^(width - lz - 1) implied by a leading-zero count.
+
+    The -1 recenters the estimate at the top bit (M ≈ 1/2·2 ⇒ expectation of
+    the mantissa interval).  lz == width (zero operand) decodes to 0.
+    """
+    mag = jnp.exp2((width - lz - 1).astype(jnp.float32))
+    return jnp.where(lz >= width, 0.0, mag)
+
+
+def quantize_int(x: jax.Array, width: int):
+    """Symmetric per-tensor quantization of a float tensor to ``width`` bits.
+
+    Returns (q, scale) with x ≈ q * scale, q integer-valued float32 in
+    [-(2^(width-1)-1), 2^(width-1)-1].
+    """
+    maxabs = jnp.maximum(jnp.max(jnp.abs(x)), 1e-9)
+    qmax = float(2 ** (width - 1) - 1)
+    scale = maxabs / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return q, scale
+
+
+def pow2_quantize(x: jax.Array, width: int):
+    """DLZS operand compression: keep only sign and leading-zero count.
+
+    x ≈ sign · 2^(width - lz - 1) · scale.  This is exactly what the paper's
+    LZ-format weights store (4-bit LZ + sign).  Returns (sign, lz, scale)
+    where scale is the int-quantization scale used before encoding.
+    """
+    q, scale = quantize_int(x, width)
+    sign, lz = lz_encode(q, width)
+    return sign, lz, scale

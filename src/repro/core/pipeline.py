@@ -1,0 +1,235 @@
+"""Cross-stage coordinated tiling pipeline (the paper's Fig. 6 dataflow).
+
+Single entry points used by every model's attention layer:
+
+  * :func:`sofa_prefill_attention`  — LTPP / prefill path.  Q is processed in
+    blocks of ``block_q`` (the accelerator's 128-query engine); for each block
+    the three stages run tile-coordinated: DLZS predicts the block's score
+    tile, SADS selects KV pages, SU-FA consumes them — the estimated scores
+    never exist outside the block's working set (VMEM in the fused kernel).
+  * :func:`sofa_decode_attention`   — decode path (one query per sequence,
+    KV cache of length S): token-granular selection.
+
+Both degrade gracefully: k_frac >= 1 reproduces dense attention exactly.
+Page granularity for prefill is the TPU adaptation of RASS (DESIGN.md §2):
+pages selected for a 128-query block ARE the schedule's shared-KV packing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dlzs, sads, sufa
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class SOFAConfig:
+    """Per-layer SOFA hyper-parameters (the DSE's search variables + impl knobs)."""
+
+    k_frac: float = 0.25        # top-k fraction of (visible) keys
+    seg_len: int = 64           # SADS segment length == SU-FA tile size B_c
+    block_q: int = 128          # parallel query block (paper engine width)
+    page: int = 64              # KV page size for block-granular selection
+    n_seg: int = 8              # segments per row for distributed sorting
+    predict_bits: int = 16      # DLZS phase-2 bit width
+    granularity: str = "block"  # "block" (prefill/TPU) | "token" (decode/ref)
+    use_kernel: bool = False    # route formal stage through the Pallas kernel
+    interpret: bool = True      # Pallas interpret mode (CPU validation)
+
+    def num_pages(self, seq: int) -> int:
+        return seq // self.page
+
+    def k_pages(self, seq: int) -> int:
+        return max(1, int(round(self.k_frac * self.num_pages(seq))))
+
+    def k_tokens(self, seq: int) -> int:
+        return max(1, int(round(self.k_frac * seq)))
+
+
+def _causal_valid(q_pos: jax.Array, k_pos: jax.Array) -> jax.Array:
+    return k_pos[None, :] <= q_pos[:, None]
+
+
+def sofa_prefill_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           cfg: SOFAConfig, causal: bool = True,
+                           scale: float | None = None,
+                           q_offset=0) -> jax.Array:
+    """Block-sparse SOFA attention for prefill.
+
+    q: (Sq, d), k: (Sk, d), v: (Sk, dv) — single head; callers vmap over
+    (batch, heads).  q_offset: absolute position of q[0] (sequence-parallel
+    callers pass their shard's offset).  Returns (Sq, dv).
+    """
+    Sq, d = q.shape
+    Sk = k.shape[0]
+    scale = (d ** -0.5) if scale is None else scale
+    bq = min(cfg.block_q, Sq)
+    if Sq % bq:
+        raise ValueError(f"Sq={Sq} not divisible by block_q={bq}")
+    if Sk % cfg.page:
+        raise ValueError(f"Sk={Sk} not divisible by page={cfg.page}")
+    n_pages = Sk // cfg.page
+    k_pages = min(cfg.k_pages(Sk), n_pages)
+    n_seg = max(1, min(cfg.n_seg, n_pages))
+    k_pos = jnp.arange(Sk, dtype=jnp.int32)
+
+    def one_block(qb, qpos):
+        # --- stage 1: DLZS prediction (log-domain, 8/16-bit operands; the
+        # estimated scores live at 16-bit — paper's predict-stage precision,
+        # and half the HBM bytes of an f32 score tile: §Perf iter 3) -------
+        ahat = dlzs.predict_scores_from_kv(
+            qb, k, width=cfg.predict_bits,
+            compute_dtype=jnp.bfloat16) * jnp.bfloat16(scale)
+        valid = _causal_valid(qpos, k_pos) if causal else None
+        # --- stage 2: SADS distributed page selection ----------------------
+        pidx, _, _ = sads.sads_block_topk(ahat, k_pages, cfg.page, n_seg,
+                                          valid_mask=valid)
+        pidx = pidx[:k_pages]                      # static count
+        # --- gather selected pages (on-demand KV materialization) ----------
+        tok = (pidx[:, None] * cfg.page +
+               jnp.arange(cfg.page, dtype=jnp.int32)[None, :]).reshape(-1)
+        ks = jnp.take(k, tok, axis=0)              # (k_pages*page, d)
+        vs = jnp.take(v, tok, axis=0)
+        # --- stage 3: SU-FA over the selected pages ------------------------
+        s = jax.lax.dot_general(                   # exact scores, f32 accum
+            qb, ks, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if causal:
+            vmask = tok[None, :] <= qpos[:, None]
+            s = jnp.where(vmask, s, NEG_INF)
+        st = s.reshape(bq, k_pages, cfg.page)
+        m = jnp.max(st, axis=-1)                   # tile max (sorter-anchored)
+        p = jnp.exp(st - m[..., None])
+        p = jnp.where(st <= NEG_INF / 2, 0.0, p)
+        l = jnp.sum(p, axis=-1)
+        vt = vs.reshape(k_pages, cfg.page, vs.shape[-1])
+        o = jnp.einsum("qtb,tbd->qtd", p.astype(vt.dtype), vt,
+                       preferred_element_type=jnp.float32)
+        return sufa.combine(sufa.TilePartial(m=m, l=l, o=o))
+
+    qb = q.reshape(Sq // bq, bq, d)
+    qpos = (q_offset
+            + jnp.arange(Sq, dtype=jnp.int32)).reshape(Sq // bq, bq)
+    out = jax.lax.map(lambda ab: one_block(*ab), (qb, qpos))
+    return out.reshape(Sq, v.shape[-1])
+
+
+def sofa_decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                          cfg: SOFAConfig, cache_len: int | None = None,
+                          scale: float | None = None) -> jax.Array:
+    """Token-granular SOFA attention for one decode step.
+
+    q: (d,) single query; k_cache/v_cache: (S, d)/(S, dv).  cache_len: valid
+    prefix length (None = full).  Returns (dv,).
+    """
+    d = q.shape[-1]
+    S = k_cache.shape[0]
+    scale = (d ** -0.5) if scale is None else scale
+    ahat = dlzs.predict_scores_from_kv(q[None, :], k_cache,
+                                       width=cfg.predict_bits)[0] * scale
+    valid = None
+    if cache_len is not None:
+        valid = jnp.arange(S) < cache_len
+    n_seg = max(1, min(cfg.n_seg, S // max(cfg.seg_len, 1)))
+    n_seg = max(1, n_seg)
+    k_tok = min(cfg.k_tokens(S), S)
+    res = sads.sads_topk(ahat, k_tok, n_seg, valid_mask=valid)
+    vsel = jnp.take_along_axis(valid, res.indices, axis=-1) if valid is not None else None
+    out = sufa.sufa_attention_sparse(
+        q[None, :], k_cache, v_cache, res.indices[None, :], res.n_seg,
+        valid=None if vsel is None else vsel[None, :], scale=scale)
+    return out[0]
+
+
+def sofa_ondemand_attention(x_kv: jax.Array, q: jax.Array, wk: jax.Array,
+                            wv: jax.Array, wk_lz: "dlzs.LZWeights",
+                            cfg: SOFAConfig, causal: bool = True,
+                            scale: float | None = None) -> jax.Array:
+    """On-demand KV prefill (paper Fig. 7 / §III-A): K and V are NEVER
+    densely projected.
+
+    Stage 1 estimates K̂ = X·LZ(W_k) with the pre-converted log-domain
+    weights (no online converter) and predicts Â from it; stage 2 selects
+    pages; stage 3 projects K/V **only for the selected pages' tokens**
+    (`K_sel = X[pages]·W_k`) — the projection FLOPs and the KV working set
+    scale with k·S instead of S.
+
+    x_kv: (S, H_model) token activations, q: (S, hd) real queries (the Q
+    projection is always needed), wk/wv: (H_model, hd) dense weights,
+    wk_lz: their offline LZ conversion.  Returns (S, hd).
+    """
+    S, hd = q.shape
+    scale = (hd ** -0.5) if scale is None else scale
+    bq = min(cfg.block_q, S)
+    n_pages = S // cfg.page
+    k_pages = min(cfg.k_pages(S), n_pages)
+    n_seg = max(1, min(cfg.n_seg, n_pages))
+    k_pos = jnp.arange(S, dtype=jnp.int32)
+
+    # stage 1: K̂ from raw activations via LZ-format weights (transient —
+    # in the fused kernel it lives in VMEM only)
+    khat = dlzs.predict_khat(x_kv, wk_lz)                  # (S, hd)
+
+    def one_block(qb, qpos):
+        ahat = dlzs.predict_scores(qb, khat,
+                                   compute_dtype=jnp.bfloat16) * scale
+        valid = _causal_valid(qpos, k_pos) if causal else None
+        pidx, _, _ = sads.sads_block_topk(ahat, k_pages, cfg.page, n_seg,
+                                          valid_mask=valid)
+        pidx = pidx[:k_pages]
+        tok = (pidx[:, None] * cfg.page +
+               jnp.arange(cfg.page, dtype=jnp.int32)[None, :]).reshape(-1)
+        # stage 3: ON-DEMAND projection of the selected tokens only
+        xs = jnp.take(x_kv, tok, axis=0)                   # (k·S_blk, H)
+        ks = xs @ wk
+        vs = xs @ wv
+        s = jax.lax.dot_general(qb, ks, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            vmask = tok[None, :] <= qpos[:, None]
+            s = jnp.where(vmask, s, NEG_INF)
+        st = s.reshape(bq, k_pages, cfg.page)
+        m = jnp.max(st, axis=-1)
+        p = jnp.exp(st - m[..., None])
+        p = jnp.where(st <= NEG_INF / 2, 0.0, p)
+        l = jnp.sum(p, axis=-1)
+        vt = vs.reshape(k_pages, cfg.page, vs.shape[-1])
+        o = jnp.einsum("qtb,tbd->qtd", p.astype(vt.dtype), vt,
+                       preferred_element_type=jnp.float32)
+        return sufa.combine(sufa.TilePartial(m=m, l=l, o=o))
+
+    qb = q.reshape(S // bq, bq, hd)
+    qpos = jnp.arange(S, dtype=jnp.int32).reshape(S // bq, bq)
+    out = jax.lax.map(lambda ab: one_block(*ab), (qb, qpos))
+    return out.reshape(S, wv.shape[-1])
+
+
+def ondemand_flop_reduction(cfg: SOFAConfig, S: int, n_blocks: int = None) -> float:
+    """QKV+attention FLOP saving of the on-demand path vs materialize-first
+    (Fig. 18's [QKV+Atten] metric): K/V projections run on k·S tokens per
+    block instead of S once — net saving when k · n_blocks_touched < 1."""
+    kf = selected_fraction(cfg, S)
+    return 1.0 - kf
+
+
+def dense_attention(q, k, v, causal=True, scale=None):
+    """Dense oracle with the same signature family (k_frac=1 equivalence)."""
+    Sq, Sk = q.shape[0], k.shape[0]
+    mask = None
+    if causal:
+        mask = _causal_valid(jnp.arange(Sq, dtype=jnp.int32),
+                             jnp.arange(Sk, dtype=jnp.int32))
+    return sufa.softmax_attention(q, k, v, mask=mask, scale=scale)
+
+
+def selected_fraction(cfg: SOFAConfig, seq: int) -> float:
+    """Fraction of KV actually touched by the formal stage (for roofline)."""
+    if cfg.granularity == "block":
+        return cfg.k_pages(seq) / max(1, cfg.num_pages(seq))
+    return cfg.k_tokens(seq) / seq

@@ -1,0 +1,161 @@
+"""SADS — Sphere-search Aided Distributed Sorting (paper §III-B).
+
+Exploits the Distributed Cluster Effect (DCE): attention-score rows are
+overwhelmingly Type-I (few dominant spikes) or Type-II (uniform), so a row
+split into n segments with a LOCAL top-(k/n) per segment recalls nearly the
+same set as a global top-k — at O(S log Bc) comparison cost instead of
+O(S log S), and, crucially, each segment's sort only needs that segment's
+tile of Â ⇒ the sorter can run tile-by-tile behind the DLZS predictor.
+
+Outputs (per row):
+  * ``indices``  — global indices of the selected keys, segment-grouped:
+                   segment j owns slots [j·k_seg, (j+1)·k_seg).
+  * ``seg_max``  — each segment's top-1 score (the paper forwards top-1/top-2
+                   to SU-FA; top-1 is the tile max that removes the online-max
+                   recurrence, top-2 feeds the clipping threshold).
+  * ``mask``     — dense boolean select mask (for reference paths / tests).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+class SADSResult(NamedTuple):
+    indices: jax.Array  # (..., n_seg * k_seg) int32, segment-grouped
+    values: jax.Array   # (..., n_seg * k_seg) selected (estimated) scores
+    seg_max: jax.Array  # (..., n_seg) top-1 per segment
+    seg_top2: jax.Array  # (..., n_seg) top-2 per segment
+    mask: jax.Array     # (..., S) bool
+    k_seg: int
+    n_seg: int
+
+
+def segment_count(seq_len: int, seg_len: int) -> int:
+    if seq_len % seg_len:
+        raise ValueError(f"seq_len {seq_len} not divisible by seg_len {seg_len}")
+    return seq_len // seg_len
+
+
+def per_segment_k(k_total: int, n_seg: int) -> int:
+    """Paper: each segment picks top-(k/n); we take the ceiling so the union
+    never undershoots the requested k."""
+    return max(1, math.ceil(k_total / n_seg))
+
+
+def sads_topk(scores: jax.Array, k_total: int, n_seg: int,
+              valid_mask: jax.Array | None = None) -> SADSResult:
+    """Distributed top-k over the last axis of ``scores``.
+
+    scores: (..., S).  valid_mask: optional (..., S) bool — False entries
+    (e.g. causal-masked or padding keys) are never selected.
+    """
+    *lead, S = scores.shape
+    if S % n_seg:
+        raise ValueError(f"S={S} not divisible by n_seg={n_seg}")
+    seg_len = S // n_seg
+    k_seg = per_segment_k(k_total, n_seg)
+    if k_seg > seg_len:
+        raise ValueError(f"k_seg={k_seg} exceeds segment length {seg_len}")
+
+    s = scores if valid_mask is None else jnp.where(valid_mask, scores, NEG_INF)
+    segd = s.reshape(*lead, n_seg, seg_len)
+
+    vals, idx = jax.lax.top_k(segd, k_seg)          # (..., n_seg, k_seg)
+    base = (jnp.arange(n_seg, dtype=jnp.int32) * seg_len)
+    gidx = idx.astype(jnp.int32) + base[..., :, None]
+
+    seg_max = vals[..., 0]
+    seg_top2 = vals[..., min(1, k_seg - 1)]
+
+    flat_idx = gidx.reshape(*lead, n_seg * k_seg)
+    flat_val = vals.reshape(*lead, n_seg * k_seg)
+
+    mask = jnp.zeros(s.shape, dtype=bool)
+    mask = jnp.put_along_axis(mask, flat_idx, True, axis=-1, inplace=False)
+    if valid_mask is not None:
+        mask = mask & valid_mask
+        flat_val = jnp.where(
+            jnp.take_along_axis(valid_mask, flat_idx, axis=-1), flat_val, NEG_INF)
+    return SADSResult(indices=flat_idx, values=flat_val, seg_max=seg_max,
+                      seg_top2=seg_top2, mask=mask, k_seg=k_seg, n_seg=n_seg)
+
+
+def global_topk_mask(scores: jax.Array, k_total: int,
+                     valid_mask: jax.Array | None = None) -> jax.Array:
+    """Oracle: dense global top-k mask (the vanilla sorter SADS replaces)."""
+    s = scores if valid_mask is None else jnp.where(valid_mask, scores, NEG_INF)
+    _, idx = jax.lax.top_k(s, k_total)
+    mask = jnp.zeros(s.shape, dtype=bool)
+    mask = jnp.put_along_axis(mask, idx, True, axis=-1, inplace=False)
+    if valid_mask is not None:
+        mask = mask & valid_mask
+    return mask
+
+
+def recall_vs_global(scores: jax.Array, k_total: int, n_seg: int) -> jax.Array:
+    """Fraction of true global top-k captured by SADS (DCE validation)."""
+    sads_mask = sads_topk(scores, k_total, n_seg).mask
+    gmask = global_topk_mask(scores, k_total)
+    hit = jnp.sum(sads_mask & gmask, axis=-1)
+    return hit / k_total
+
+
+def iterative_segment_topk(seg_scores: jax.Array, k_seg: int):
+    """Iterative max-extraction top-k over one segment — the exact selection
+    the hardware's 16→4 bitonic core performs, with the adaptive CLIPPING rule
+    of the paper's clipping module: once the running output buffer holds k_seg
+    values, any candidate below ``low_bound`` (the buffer min) can be skipped.
+
+    Used by the Pallas sorter kernel (and for comparison counting).  Returns
+    (values, local_indices, comparisons_counted_upper_bound).
+    """
+    seg_len = seg_scores.shape[-1]
+
+    def body(carry, _):
+        s, vals, idxs, j = carry
+        m = jnp.max(s, axis=-1)
+        i = jnp.argmax(s, axis=-1).astype(jnp.int32)
+        vals = vals.at[..., j].set(m)
+        idxs = idxs.at[..., j].set(i)
+        s = jnp.put_along_axis(s, i[..., None], NEG_INF, axis=-1, inplace=False)
+        return (s, vals, idxs, j + 1), None
+
+    vals0 = jnp.full(seg_scores.shape[:-1] + (k_seg,), NEG_INF, seg_scores.dtype)
+    idxs0 = jnp.zeros(seg_scores.shape[:-1] + (k_seg,), jnp.int32)
+    (_, vals, idxs, _), _ = jax.lax.scan(
+        body, (seg_scores, vals0, idxs0, 0), None, length=k_seg)
+    comparisons = k_seg * seg_len  # upper bound; clipping reduces this on HW
+    return vals, idxs, comparisons
+
+
+# ---------------------------------------------------------------------------
+# Block-granular selection (TPU adaptation; see DESIGN.md §2).
+# ---------------------------------------------------------------------------
+
+def sads_block_topk(scores: jax.Array, k_pages: int, page: int,
+                    n_seg: int, valid_mask: jax.Array | None = None):
+    """Select KV *pages* shared by a whole query block.
+
+    scores: (Bq, S) — a query block's estimated scores.  Page importance is
+    the per-page max over queries (argmax-dominant, matching softmax's
+    approximation to argmax); pages are then picked with the same distributed
+    rule: segments of pages choose their local share.
+
+    Returns (page_indices (n_sel,), page_scores, page_mask (S//page,)).
+    """
+    Bq, S = scores.shape[-2:]
+    if S % page:
+        raise ValueError(f"S={S} not divisible by page={page}")
+    n_pages = S // page
+    s = scores if valid_mask is None else jnp.where(valid_mask, scores, NEG_INF)
+    page_imp = s.reshape(*s.shape[:-1], n_pages, page).max(axis=-1)  # (Bq, n_pages)
+    page_imp = page_imp.max(axis=-2)                                  # (n_pages,)
+    n_seg = min(n_seg, n_pages)
+    res = sads_topk(page_imp, k_pages, n_seg)
+    return res.indices, res.values, res.mask

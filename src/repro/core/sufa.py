@@ -1,0 +1,129 @@
+"""SU-FA — Sorted-Updating FlashAttention (paper §III-C, Fig. 10).
+
+Classic FA/FA-2 maintains a *running* max while streaming KV tiles; every tile
+costs per-element comparisons plus a rescale multiply of the accumulated
+(l, o) whenever the max moves.  SU-FA uses the top-k stage's per-tile top-1 to
+anchor each tile at its own max and defers ALL cross-tile rescaling to one
+final combine (the descending-order algebra of Fig. 10(a) Eq. (2): updating
+l needs one exp + one add, no multiply):
+
+    per tile j :  m_j known ⇒  l^(j) = Σ_t exp(s_t - m_j)
+                               o^(j) = Σ_t exp(s_t - m_j) · v_t
+    epilogue   :  m = max_j m_j
+                  l = Σ_j l^(j) e^(m_j - m),   o = Σ_j o^(j) e^(m_j - m)
+                  O = o / l
+
+This is EXACT softmax attention over the visited keys (shift invariance), so
+prediction error in the top-k stage costs recall only, never correctness.
+The "max assurance" of the AP module (paper §IV-D) appears here as the
+in-tile ``max`` guard: we anchor at the true tile max of the *selected*
+scores, which is one cheap VPU reduce — never a cross-tile recurrence.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+class TilePartial(NamedTuple):
+    m: jax.Array  # (..., n_tiles)            per-tile max
+    l: jax.Array  # (..., n_tiles)            per-tile sum of exp
+    o: jax.Array  # (..., n_tiles, dv)        per-tile weighted V sum
+
+
+def tile_partials(q: jax.Array, k: jax.Array, v: jax.Array, seg_len: int,
+                  mask: jax.Array | None = None,
+                  scale: float | None = None) -> TilePartial:
+    """Compute per-tile (m, l, o) for dense-with-mask attention.
+
+    q: (..., Sq, d), k: (..., Sk, d), v: (..., Sk, dv),
+    mask: (..., Sq, Sk) bool (True = attend).  Tiles partition Sk.
+    """
+    *_, Sk, d = k.shape
+    if Sk % seg_len:
+        raise ValueError(f"Sk={Sk} not divisible by seg_len={seg_len}")
+    n_tiles = Sk // seg_len
+    scale = (d ** -0.5) if scale is None else scale
+
+    s = (q @ jnp.swapaxes(k, -1, -2)) * scale            # (..., Sq, Sk)
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    st = s.reshape(*s.shape[:-1], n_tiles, seg_len)      # (..., Sq, T, B)
+    m = jnp.max(st, axis=-1)                             # (..., Sq, T)
+    p = jnp.exp(st - m[..., None])
+    p = jnp.where(st <= NEG_INF / 2, 0.0, p)             # fully-masked guard
+    l = jnp.sum(p, axis=-1)
+    vt = v.reshape(*v.shape[:-2], n_tiles, seg_len, v.shape[-1])
+    o = jnp.einsum("...qtb,...tbd->...qtd", p, vt)
+    return TilePartial(m=m, l=l, o=o)
+
+
+def combine(parts: TilePartial) -> jax.Array:
+    """Single cross-tile synchronization (Fig. 10(b) lines 5–7)."""
+    m = jnp.max(parts.m, axis=-1, keepdims=True)          # (..., Sq, 1)
+    w = jnp.exp(parts.m - m)
+    w = jnp.where(parts.m <= NEG_INF / 2, 0.0, w)
+    l = jnp.sum(parts.l * w, axis=-1)                     # (..., Sq)
+    o = jnp.einsum("...qt,...qtd->...qd", w, parts.o)
+    return o / jnp.maximum(l, 1e-30)[..., None]
+
+
+def sufa_attention(q: jax.Array, k: jax.Array, v: jax.Array, seg_len: int,
+                   mask: jax.Array | None = None,
+                   scale: float | None = None) -> jax.Array:
+    """Dense(-masked) SU-FA — exact attention, tile-anchored normalization."""
+    return combine(tile_partials(q, k, v, seg_len, mask=mask, scale=scale))
+
+
+def sufa_attention_sparse(q: jax.Array, k: jax.Array, v: jax.Array,
+                          indices: jax.Array, n_seg: int,
+                          valid: jax.Array | None = None,
+                          scale: float | None = None) -> jax.Array:
+    """Token-granular sparse SU-FA (reference path).
+
+    q: (..., Sq, d); k/v: (..., Sk, d/dv); indices: (..., Sq, n_sel) from
+    SADS, segment-grouped with n_sel = n_seg * k_seg; valid: (..., Sq, n_sel)
+    bool (False ⇒ slot is padding / causally masked).
+    Gathers per-query K/V — exact semantics, O(Sq·n_sel·d) memory, so this is
+    the oracle for the paged kernel, not the production path.
+    """
+    *_, Sq, n_sel = indices.shape
+    d = q.shape[-1]
+    scale = (d ** -0.5) if scale is None else scale
+    if n_sel % n_seg:
+        raise ValueError("n_sel must be n_seg * k_seg")
+
+    ks = jnp.take_along_axis(k[..., None, :, :],
+                             indices[..., None], axis=-2)   # (..., Sq, n_sel, d)
+    vs = jnp.take_along_axis(v[..., None, :, :],
+                             indices[..., None], axis=-2)
+    s = jnp.einsum("...qd,...qnd->...qn", q, ks) * scale
+    if valid is not None:
+        s = jnp.where(valid, s, NEG_INF)
+    st = s.reshape(*s.shape[:-1], n_seg, n_sel // n_seg)
+    m = jnp.max(st, axis=-1)
+    p = jnp.exp(st - m[..., None])
+    p = jnp.where(st <= NEG_INF / 2, 0.0, p)
+    l = jnp.sum(p, axis=-1)
+    vt = vs.reshape(*vs.shape[:-2], n_seg, n_sel // n_seg, vs.shape[-1])
+    o = jnp.einsum("...qtb,...qtbd->...qtd", p, vt)
+    return combine(TilePartial(m=m, l=l, o=o))
+
+
+def softmax_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      mask: jax.Array | None = None,
+                      scale: float | None = None) -> jax.Array:
+    """Vanilla oracle."""
+    d = q.shape[-1]
+    scale = (d ** -0.5) if scale is None else scale
+    s = (q @ jnp.swapaxes(k, -1, -2)) * scale
+    if mask is not None:
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if mask is not None:
+        p = jnp.where(jnp.any(mask, axis=-1, keepdims=True), p, 0.0)
+    return p @ v

@@ -1,0 +1,87 @@
+"""Logical activation-sharding constraints (MaxText-style).
+
+Without constraints, XLA's SPMD propagation may replicate the batch and
+shard d_ff for the big MLP matmuls (gathering ACTIVATIONS instead of
+weights) — the 2.4-GiB-per-tensor failure mode recorded in EXPERIMENTS.md
+§Perf iter 0.  Model code calls ``shard_act(x, kind)`` at layout anchor
+points; the step builder installs the mesh's axis mapping in a context
+variable before tracing; outside any mesh context the call is a no-op
+(single-device smoke tests).
+
+Logical kinds:
+  btd    — (batch, seq, d_model)        batch → dp
+  bthd   — (batch, seq, heads, hd)      batch → dp, heads → tp
+  btf    — (batch, seq, d_ff)           batch → dp, d_ff → tp
+  btv    — (batch, seq, vocab-shard)    batch → dp, vocab → tp
+  ecd    — (experts, cap, d)            experts → tp
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX: contextvars.ContextVar[dict | None] = contextvars.ContextVar(
+    "act_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: jax.sharding.Mesh):
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    token = _CTX.set({"dp": dp if len(dp) > 1 else (dp[0] if dp else None),
+                      "tp": "model" if "model" in mesh.axis_names else None,
+                      "mesh": mesh})
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def _spec(kind: str, ndim: int, ctx: dict) -> P:
+    dp, tp = ctx["dp"], ctx["tp"]
+    if kind == "btd":
+        return P(dp, *([None] * (ndim - 1)))
+    if kind == "btd_seq":
+        # Megatron-SP: sequence-shard the inter-layer residual so the
+        # per-layer activation checkpoint stack is 1/tp the size; XLA
+        # inserts the gather/scatter at the block's first/last matmul.
+        return P(dp, tp, *([None] * (ndim - 2)))
+    if kind == "bthd":
+        return P(dp, None, tp, *([None] * (ndim - 3)))
+    if kind == "btf":
+        return P(dp, *([None] * (ndim - 2)), tp)
+    if kind == "btv":
+        return P(dp, *([None] * (ndim - 2)), tp)
+    if kind == "ecd":
+        return P(tp, *([None] * (ndim - 1)))
+    if kind == "td":
+        # flat token axis (B·S merged): inherits the batch's dp sharding
+        return P(dp, *([None] * (ndim - 1)))
+    raise ValueError(kind)
+
+
+def _divisible(shape, spec: P, mesh) -> bool:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        need = 1
+        for a in axes:
+            need *= sizes[a]
+        if dim % need:
+            return False
+    return True
+
+
+def shard_act(x: jax.Array, kind: str) -> jax.Array:
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    spec = _spec(kind, x.ndim, ctx)
+    if not _divisible(x.shape, spec, ctx["mesh"]):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,81 @@
+"""GPipe-style pipeline parallelism via shard_map + ppermute.
+
+Optional feature (off in the production dry-run — at 512 chips the models in
+the pool fit FSDP×TP comfortably, and DP over pods beats PP on DCN for these
+sizes; see EXPERIMENTS.md).  Provided and tested because 1000+-node
+deployments of deeper models want it: stage the layer stack over a ``pipe``
+mesh axis, stream microbatches, overlap the bubble.
+
+The schedule below is the classic GPipe timing: T = M + S - 1 ticks; at tick
+t, stage s processes microbatch (t - s).  Activations hop stages with
+``ppermute``; the bubble is masked out.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def gpipe(stage_fn: Callable, mesh: Mesh, axis: str, n_stages: int):
+    """Build a pipelined apply: (stage_params, x_microbatched) → y.
+
+    stage_params: pytree whose leaves have leading dim n_stages (sharded over
+    ``axis``); x_microbatched: (M, mb, ...) microbatches (replicated).
+    stage_fn(params_slice, x) → y with x/y the same shape.
+    """
+
+    def pipelined(stage_params, xs):
+        M = xs.shape[0]
+        T = M + n_stages - 1
+
+        def inner(params_local, xs_local):
+            # inside shard_map: params_local leaves have leading dim 1
+            params_local = jax.tree.map(lambda a: a[0], params_local)
+            sid = jax.lax.axis_index(axis)
+            mb_shape = xs_local.shape[1:]
+            # carries become device-varying after the first ppermute; mark
+            # them varying from the start so the loop carry types match
+            state = jax.lax.pcast(jnp.zeros(mb_shape, xs_local.dtype),
+                                  (axis,), to="varying")
+            outs = jax.lax.pcast(jnp.zeros((M,) + mb_shape, xs_local.dtype),
+                                 (axis,), to="varying")
+
+            def tick(t, carry):
+                state, outs = carry
+                # stage 0 ingests microbatch t (while in range)
+                mb_idx = jnp.clip(t, 0, M - 1)
+                inject = jax.lax.dynamic_index_in_dim(xs_local, mb_idx, 0,
+                                                      keepdims=False)
+                x = jnp.where(sid == 0, inject, state)
+                y = stage_fn(params_local, x)
+                # last stage emits microbatch (t - (S-1)) when valid
+                out_idx = jnp.clip(t - (n_stages - 1), 0, M - 1)
+                emit = (t >= n_stages - 1) & (sid == n_stages - 1)
+                cur = jax.lax.dynamic_index_in_dim(outs, out_idx, 0,
+                                                   keepdims=False)
+                outs = jax.lax.dynamic_update_index_in_dim(
+                    outs, jnp.where(emit, y, cur), out_idx, 0)
+                # hop to the next stage
+                state = jax.lax.ppermute(
+                    y, axis, [(i, i + 1) for i in range(n_stages - 1)])
+                return state, outs
+
+            _, outs = jax.lax.fori_loop(0, T, tick, (state, outs))
+            # only the last stage holds real outputs; broadcast them
+            outs = jax.lax.psum(
+                jnp.where(sid == n_stages - 1, outs, jnp.zeros_like(outs)),
+                axis)
+            return outs
+
+        return shard_map(
+            inner, mesh=mesh,
+            in_specs=(P(axis), P()),
+            out_specs=P(),
+        )(stage_params, xs)
+
+    return pipelined

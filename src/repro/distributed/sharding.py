@@ -1,0 +1,214 @@
+"""Divisibility-aware sharding rules (FSDP × TP × EP × sequence-sharded decode).
+
+Strategy (see DESIGN.md §3):
+  * params — greedy per-leaf: last dim → ``model`` (TP: heads/d_ff/vocab out),
+    second-to-last → ``data`` (FSDP; this is also what fully shards optimizer
+    moments, the ZeRO-1 effect).  A dim is only assigned an axis it divides
+    evenly; otherwise the next candidate (or replication) is used — e.g.
+    minicpm's odd vocab 122753 falls back automatically.
+  * MoE expert stacks (E, d, d_e) — expert dim takes ``model`` (EP), d takes
+    ``data``.
+  * scanned-period stacks — leading layer dim is never sharded.
+  * decode caches — batch → (pod, data); the SEQUENCE dim of KV caches →
+    ``model`` (flash-decoding style: per-shard partial attention + cheap
+    cross-shard softmax reduction).  This is what makes 32k-decode at
+    batch 128 fit HBM when kv_heads < mesh model size.
+  * batches — leading batch dim → ("pod","data") when divisible.
+  * pod axis — batch parallelism only (params replicated across pods).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes
+
+
+# ---------------------------------------------------------------------------
+# core assignment
+# ---------------------------------------------------------------------------
+
+def _greedy_spec(shape: tuple[int, ...], mesh: Mesh, skip: int = 0,
+                 expert_first: bool = False) -> P:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    assigned: list[Any] = [None] * len(shape)
+    used: set[str] = set()
+
+    dims = list(range(skip, len(shape)))
+    if len(dims) < 2:           # 1-D (norm scales etc.): replicate
+        return P(*assigned)
+
+    if expert_first and len(dims) >= 2:
+        e = dims[0]
+        if "model" in sizes and shape[e] % sizes["model"] == 0:
+            assigned[e] = "model"
+            used.add("model")
+        # FSDP the largest remaining dim (the d_model side, so the EP path's
+        # in-body all_gather axis is consistent for wi and wo)
+        rest = sorted(dims[1:], key=lambda i: -shape[i])
+        for dcand in rest:
+            if "data" in sizes and shape[dcand] % sizes["data"] == 0:
+                assigned[dcand] = "data"
+                used.add("data")
+                break
+        return P(*assigned)
+
+    for dim, axis in ((dims[-1], "model"), (dims[-2], "data")):
+        if axis in sizes and axis not in used and shape[dim] % sizes[axis] == 0:
+            assigned[dim] = axis
+            used.add(axis)
+        elif axis == "model":
+            # fallback: try model on the other dim (odd-vocab embeds etc.)
+            alt = dims[-2]
+            if shape[alt] % sizes["model"] == 0:
+                assigned[alt] = "model"
+                used.add("model")
+    return P(*assigned)
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return out
+
+
+def param_specs(params_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching a params (shape) tree."""
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        skip = 1 if (names and names[0] in ("period", "encoder")) else 0
+        eff_ndim = len(leaf.shape) - skip
+        expert = "ffn" in names and eff_ndim == 3 and "shared" not in names
+        if names and names[-1] in ("embed", "head") and eff_ndim == 2:
+            # megatron vocab-parallel embedding/head: vocab → model so the
+            # logits chunk stays (B:data, c, V:model) with NO d-contraction
+            # all-reduce and NO batch replication (the 52-GiB-temp failure
+            # mode of the generic rule — see EXPERIMENTS.md §Perf iter 0).
+            vdim = 0 if names[-1] == "embed" else 1
+            ddim = 1 - vdim
+            spec = [None, None]
+            if leaf.shape[vdim] % sizes.get("model", 1) == 0:
+                spec[vdim] = "model"
+                if leaf.shape[ddim] % sizes.get("data", 1) == 0:
+                    spec[ddim] = "data"
+            else:                      # odd vocab (minicpm) → fallback
+                if leaf.shape[ddim] % sizes.get("model", 1) == 0:
+                    spec[ddim] = "model"
+            return P(*spec)
+        return _greedy_spec(leaf.shape, mesh, skip=skip, expert_first=expert)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def opt_specs(opt_shape: Any, mesh: Mesh) -> Any:
+    """Optimizer-state specs: param specs + ZeRO across pods.
+
+    AdamW moments are touched only in the (elementwise) update, so on a
+    multi-pod mesh they additionally shard their FSDP dim over ``pod`` —
+    state bytes drop 2× and the per-step DCN cost is one reduce-scatter of
+    grads + one all-gather of updated params (standard ZeRO-1 hierarchy:
+    ICI inside the pod, DCN across)."""
+    base = param_specs(opt_shape, mesh)
+    if "pod" not in mesh.axis_names:
+        return base
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def upgrade(spec, leaf):
+        entries = list(spec)
+        for i, e in enumerate(entries):
+            if e == "data" and leaf.shape[i] % (sizes["data"] * sizes["pod"]) == 0:
+                entries[i] = ("data", "pod")
+                return P(*entries)
+        return spec
+
+    leaves_spec, treedef = jax.tree_util.tree_flatten(
+        base, is_leaf=lambda x: isinstance(x, P))
+    leaves_shape = jax.tree_util.tree_leaves(opt_shape)
+    out = [upgrade(s, l) for s, l in zip(leaves_spec, leaves_shape)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def cache_specs(caches_shape: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree for decode caches."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([sizes[a] for a in daxes]))
+
+    def leaf_spec(path, leaf):
+        names = _path_names(path)
+        skip = 1 if (names and names[0] == "period") else 0
+        shape = leaf.shape
+        spec: list[Any] = [None] * len(shape)
+        b = skip                                   # batch dim position
+        if b < len(shape) and shape[b] % dsize == 0 and dsize > 1:
+            spec[b] = daxes if len(daxes) > 1 else daxes[0]
+        leafname = names[-1] if names else ""
+        if leafname in ("k", "v", "latent", "ks", "vs") and len(shape) > b + 1:
+            seq = b + 1                            # sequence dim → model
+            if shape[seq] % sizes.get("model", 1) == 0:
+                spec[seq] = "model"
+        elif leafname in ("ssm", "h", "conv") and len(shape) > b + 1:
+            # state channel/head dim → model when divisible
+            ch = b + 1 if leafname == "h" else len(shape) - 1 - (
+                1 if leafname == "ssm" else 0)
+            ch = min(ch, len(shape) - 1)
+            if shape[ch] % sizes.get("model", 1) == 0 and spec[ch] is None:
+                spec[ch] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, caches_shape)
+
+
+def batch_specs(batch_shape: Any, mesh: Mesh) -> Any:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([sizes[a] for a in daxes]))
+
+    def leaf_spec(leaf):
+        shape = leaf.shape
+        spec: list[Any] = [None] * len(shape)
+        if shape and shape[0] % dsize == 0 and dsize > 1:
+            spec[0] = daxes if len(daxes) > 1 else daxes[0]
+        elif shape and len(shape) > 1 and shape[1] % dsize == 0 and dsize > 1:
+            spec[1] = daxes if len(daxes) > 1 else daxes[0]   # SP fallback
+        return P(*spec)
+
+    return jax.tree.map(leaf_spec, batch_shape)
+
+
+def to_named(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# sanity helpers
+# ---------------------------------------------------------------------------
+
+def bytes_per_device(shape_tree: Any, spec_tree: Any, mesh: Mesh) -> int:
+    """Param bytes landing on one device under the given specs."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def leaf_bytes(leaf, spec):
+        n = int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+        denom = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                denom *= sizes[ax]
+        return n // denom
+
+    leaves = zip(jax.tree.leaves(shape_tree),
+                 jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, P)))
+    return sum(leaf_bytes(l, s) for l, s in leaves)

@@ -1,0 +1,168 @@
+"""Step builders: train_step / prefill_step / serve_step, and their
+sharded jit lowering (the single entry used by launcher, dry-run and tests).
+
+Gradient accumulation microbatching is built in: with ``accum > 1`` the
+batch splits along B and grads accumulate in a scan — XLA overlaps each
+microbatch's reduce-scatter with the next microbatch's compute (the
+standard comm/compute overlap at scale).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import specs as specs_lib
+from repro.distributed import sharding
+from repro.distributed.act_sharding import activation_sharding
+from repro.models import model as model_lib
+from repro.optim import adamw, schedule as schedule_lib
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, *, schedule: str = "cosine", peak_lr: float = 3e-4,
+                    warmup: int = 100, total: int = 10000, accum: int = 1,
+                    remat: bool = True) -> Callable:
+    sched_fn = schedule_lib.get(schedule)
+
+    def loss_fn(params, batch):
+        loss, metrics = model_lib.lm_loss(cfg, params, batch, remat=remat)
+        return loss, metrics
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def micro(carry, mb):
+                gacc, lacc = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                gacc = jax.tree.map(jnp.add, gacc, g)
+                return (gacc, lacc + l), None
+
+            mbs = jax.tree.map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]),
+                batch)
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(micro, (g0, jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss = loss / accum
+            metrics = {}
+
+        lr = sched_fn(opt_state.step, peak=peak_lr, warmup=warmup,
+                      total=total, stable=total, decay=max(total // 10, 1))
+        params, opt_state = adamw.update(params, grads, opt_state, lr)
+        out = {"loss": loss, "lr": lr}
+        out.update({k: v for k, v in metrics.items()})
+        return params, opt_state, out
+
+    return train_step
+
+
+def make_prefill_step(cfg) -> Callable:
+    def prefill_step(params, batch):
+        enc_out = None
+        if cfg.encoder_layers:
+            enc_out = model_lib.encode(cfg, params, batch["frames"])
+            if cfg.family == "encdec":
+                hidden, _, _ = model_lib.forward(cfg, params, batch["tokens"],
+                                                 enc_out=enc_out)
+                return model_lib.logits_head(cfg, params, hidden[:, -1:])
+        hidden, _, _ = model_lib.forward(cfg, params, batch["tokens"],
+                                         patches=batch.get("patches"),
+                                         enc_out=enc_out)
+        return model_lib.logits_head(cfg, params, hidden[:, -1:])
+
+    return prefill_step
+
+
+def make_serve_step(cfg) -> Callable:
+    def serve_step(params, caches, token, pos, enc_out=None):
+        return model_lib.decode_step(cfg, params, caches, token, pos,
+                                     enc_out=enc_out)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharded lowering
+# ---------------------------------------------------------------------------
+
+def abstract_state(cfg, with_opt: bool = True):
+    params = specs_lib.param_specs(cfg)
+    if not with_opt:
+        return params
+    opt = jax.eval_shape(lambda p: adamw.init(p), params)
+    return params, opt
+
+
+def lower_train(cfg, mesh, shape_cfg, *, accum: int = 1, remat: bool = True,
+                donate: bool = True, extra_kwargs: dict | None = None):
+    """Returns (lowered, shardings) for train_step on the given mesh."""
+    params_abs, opt_abs = abstract_state(cfg)
+    batch_abs = specs_lib.batch_specs(cfg, shape_cfg)
+
+    pspec = sharding.param_specs(params_abs, mesh)
+    ospec = sharding.opt_specs(opt_abs, mesh)
+    bspec = sharding.batch_specs(batch_abs, mesh)
+
+    pshard = sharding.to_named(pspec, mesh)
+    oshard = sharding.to_named(ospec, mesh)
+    bshard = sharding.to_named(bspec, mesh)
+
+    step = make_train_step(cfg, accum=accum, remat=remat,
+                           **(extra_kwargs or {}))
+    jitted = jax.jit(
+        step,
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    with mesh, activation_sharding(mesh):
+        lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+    return lowered, {"params": pshard, "opt": oshard, "batch": bshard}
+
+
+def lower_prefill(cfg, mesh, shape_cfg):
+    params_abs = abstract_state(cfg, with_opt=False)
+    batch_abs = specs_lib.batch_specs(cfg, shape_cfg)
+    batch_abs.pop("labels", None)
+
+    pshard = sharding.to_named(sharding.param_specs(params_abs, mesh), mesh)
+    bshard = sharding.to_named(sharding.batch_specs(batch_abs, mesh), mesh)
+
+    jitted = jax.jit(make_prefill_step(cfg),
+                     in_shardings=(pshard, bshard), out_shardings=None)
+    with mesh, activation_sharding(mesh):
+        lowered = jitted.lower(params_abs, batch_abs)
+    return lowered, {"params": pshard, "batch": bshard}
+
+
+def lower_serve(cfg, mesh, shape_cfg):
+    params_abs = abstract_state(cfg, with_opt=False)
+    dspec = specs_lib.decode_specs(cfg, shape_cfg)
+
+    pshard = sharding.to_named(sharding.param_specs(params_abs, mesh), mesh)
+    cshard = sharding.to_named(sharding.cache_specs(dspec["caches"], mesh), mesh)
+    tshard = sharding.to_named(sharding.batch_specs(
+        {"token": dspec["token"]}, mesh)["token"], mesh)
+
+    args = [params_abs, dspec["caches"], dspec["token"], dspec["pos"]]
+    in_sh = [pshard, cshard, tshard, None]
+    if "enc_out" in dspec:
+        args.append(dspec["enc_out"])
+        in_sh.append(sharding.to_named(sharding.batch_specs(
+            {"e": dspec["enc_out"]}, mesh)["e"], mesh))
+
+    jitted = jax.jit(make_serve_step(cfg),
+                     in_shardings=tuple(in_sh),
+                     out_shardings=(None, cshard),
+                     donate_argnums=(1,))
+    with mesh, activation_sharding(mesh):
+        lowered = jitted.lower(*args)
+    return lowered, {"params": pshard, "caches": cshard}

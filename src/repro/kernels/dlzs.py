@@ -1,0 +1,60 @@
+"""DLZS prediction Pallas kernel (pre-compute stage on TPU).
+
+Grid: (n_q_blocks, n_pages).  Each step estimates one (block_q × page) tile
+of Â from LZ-encoded Q and int-quantized K̂ — and reduces it IMMEDIATELY to
+the page's predicted max.  The estimated-score tile lives only in VMEM/VREGs;
+what reaches HBM is the (n_qb × n_pages) importance matrix — ~page·block_q×
+smaller than Â.  This is the cross-stage tiling contract: the sorter consumes
+page importances, never the score matrix.
+
+LZ encoding in-kernel: sign(x)·2^floor(log2|x|) on the VPU (the TPU analogue
+of the leading-zero encoder; exponent-add == shift).  The matmul runs on the
+MXU with power-of-two operands — the faithful cost model is an int8 matmul
+(operand bytes, not multiplier energy, is what the TPU trades on).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pow2_encode(x: jax.Array) -> jax.Array:
+    ax = jnp.abs(x)
+    e = jnp.floor(jnp.log2(jnp.maximum(ax, 1e-30)))
+    return jnp.where(ax > 0, jnp.sign(x) * jnp.exp2(e), 0.0)
+
+
+def _dlzs_kernel(q_ref, k_ref, imp_ref, *, scale: float):
+    qt = _pow2_encode(q_ref[...])
+    s = jax.lax.dot_general(qt, k_ref[...], (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    imp_ref[0, 0] = jnp.max(s)
+
+
+@functools.partial(jax.jit, static_argnames=("page", "block_q", "scale",
+                                             "interpret"))
+def dlzs_page_importance(q: jax.Array, khat: jax.Array, *, page: int = 128,
+                         block_q: int = 128, scale: float = 1.0,
+                         interpret: bool = True) -> jax.Array:
+    """q: (Sq, d) int-valued f32 (quantized), khat: (Sk, d) int-valued f32.
+
+    Returns (n_qb, n_pages) f32 page importance == predicted page max."""
+    Sq, d = q.shape
+    Sk = khat.shape[0]
+    assert Sq % block_q == 0 and Sk % page == 0
+    n_qb, n_pages = Sq // block_q, Sk // page
+
+    return pl.pallas_call(
+        functools.partial(_dlzs_kernel, scale=scale),
+        grid=(n_qb, n_pages),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((page, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n_qb, n_pages), jnp.float32),
+        interpret=interpret,
+    )(q, khat)

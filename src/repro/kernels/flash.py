@@ -1,0 +1,87 @@
+"""FA-2 baseline Pallas kernel — the scheme SU-FA is measured against.
+
+Standard online-softmax flash attention: grid (n_q_blocks, n_kv_tiles), a
+running max ``m`` refreshed per tile (the comparisons SU-FA deletes) and an
+(l, o) rescale multiply whenever it moves (the multiplies SU-FA deletes).
+Kept as (a) the dense attention backend for non-SOFA configs, and (b) the
+baseline for benchmarks/fig19_throughput.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, scale: float, causal: bool,
+                  n_kv: int):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s = jax.lax.dot_general(q_ref[...], k_ref[...], (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))      # the online max
+    alpha = jnp.exp(m_prev - m_new)                      # the rescale SU-FA kills
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, alpha)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _epilogue():
+        o_ref[...] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k", "scale",
+                                             "causal", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    block_q: int = 128, block_k: int = 128,
+                    scale: float = 1.0, causal: bool = True,
+                    interpret: bool = True) -> jax.Array:
+    """Dense FA-2. q: (Sq, d), k/v: (Sk, d)/(Sk, dv) → (Sq, dv) f32."""
+    Sq, d = q.shape
+    Sk, dv = v.shape
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    n_q, n_kv = Sq // block_q, Sk // block_k
+
+    kernel = functools.partial(_flash_kernel, block_q=block_q, block_k=block_k,
+                               scale=scale, causal=causal, n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_k, dv), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, dv), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Sq, dv), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),      # m
+            pltpu.VMEM((block_q,), jnp.float32),      # l
+            pltpu.VMEM((block_q, dv), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

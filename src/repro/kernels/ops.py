@@ -1,0 +1,110 @@
+"""Jit'd wrappers composing the Pallas kernels into the production SOFA op.
+
+``sofa_attention_kernel`` is the three-stage pipeline with kernels at each
+compute hot spot:
+
+  1. kernels/dlzs.py   — Â tile → page importance (Â never reaches HBM)
+  2. plain jnp top-k   — page selection over the tiny importance matrix
+                         (n_qb × n_pages; O(S²/page/block_q) — not a hot spot)
+  3. kernels/sufa.py   — paged SU-FA with scalar-prefetched page indices
+
+Head/batch axes are handled by vmap in the model layer; these ops are
+single-(head,batch) and 2-D, matching the kernels' BlockSpecs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import numerics
+from repro.core.pipeline import SOFAConfig
+from repro.kernels.dlzs import dlzs_page_importance
+from repro.kernels.flash import flash_attention
+from repro.kernels.sufa import sufa_paged_attention
+
+NEG_INF = -1e30
+
+
+def select_pages(importance: jax.Array, k_pages: int, n_seg: int,
+                 causal: bool, block_q: int, page: int):
+    """SADS page selection on the importance matrix.
+
+    importance: (n_qb, n_pages).  Distributed rule: segments of pages pick
+    their local share, exactly like token-level SADS but one level up.
+    Returns (page_idx (n_qb, k_sel), anchor (n_qb,)).
+    """
+    n_qb, n_pages = importance.shape
+    if causal:
+        # a page is visible to a q-block iff its first token precedes the
+        # block's last query
+        qend = (jnp.arange(n_qb) + 1) * block_q - 1
+        pstart = jnp.arange(n_pages) * page
+        visible = pstart[None, :] <= qend[:, None]
+        importance = jnp.where(visible, importance, NEG_INF)
+
+    n_seg = max(1, min(n_seg, n_pages))
+    k_seg = max(1, -(-k_pages // n_seg))
+    seg_len = n_pages // n_seg
+    if seg_len * n_seg != n_pages:          # ragged tail → global top-k
+        vals, idx = jax.lax.top_k(importance, min(k_pages, n_pages))
+    else:
+        k_seg = min(k_seg, seg_len)
+        seg = importance.reshape(n_qb, n_seg, seg_len)
+        v, i = jax.lax.top_k(seg, k_seg)
+        idx = (i + (jnp.arange(n_seg) * seg_len)[None, :, None]).reshape(n_qb, -1)
+        vals = v.reshape(n_qb, -1)
+    # anchor = max over selected predicted page maxes (the SU-FA scalar)
+    anchor = jnp.max(jnp.where(vals <= NEG_INF / 2, -1e4, vals), axis=-1)
+    # slots holding masked-out pages (early causal blocks can see fewer pages
+    # than k_sel) are clamped to page 0 and flagged invalid — the kernel
+    # zeroes their contribution via the prefetched validity array.
+    valid = (vals > NEG_INF / 2).astype(jnp.int32)
+    idx = jnp.where(vals <= NEG_INF / 2, 0, idx).astype(jnp.int32)
+    return idx, anchor, valid
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "causal", "scale"))
+def sofa_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
+                          cfg: SOFAConfig, causal: bool = True,
+                          scale: float | None = None) -> jax.Array:
+    """Full kernelized SOFA attention for one (batch, head).
+
+    q: (Sq, d), k: (Sk, d), v: (Sk, dv) → (Sq, dv).
+    """
+    Sq, d = q.shape
+    Sk = k.shape[0]
+    scale = (d ** -0.5) if scale is None else scale
+    block_q = min(cfg.block_q, Sq)
+    page = min(cfg.page, Sk)
+
+    # stage 1: quantize operands (host of the LZ datapath) + predict kernel.
+    # Dequant scales are data-dependent and monotonic ⇒ applied OUTSIDE the
+    # kernel (they cannot change the top-k selection, only anchor magnitude).
+    qq, qscale = numerics.quantize_int(q, numerics.W16)
+    kq, kscale = numerics.quantize_int(k, numerics.W16)
+    imp = dlzs_page_importance(qq, kq, page=page, block_q=block_q,
+                               scale=1.0, interpret=cfg.interpret)
+    imp = imp * (scale * qscale * kscale)
+
+    # stage 2: SADS page selection (tiny)
+    k_pages = min(cfg.k_pages(Sk), Sk // page)
+    page_idx, anchor, valid = select_pages(imp, k_pages, cfg.n_seg, causal,
+                                           block_q, page)
+
+    # stage 3: paged SU-FA kernel
+    return sufa_paged_attention(q, k, v, page_idx, anchor, valid, page=page,
+                                block_q=block_q, scale=scale, causal=causal,
+                                interpret=cfg.interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "block_q",
+                                             "block_k", "interpret"))
+def dense_flash(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True,
+                scale: float | None = None, block_q: int = 128,
+                block_k: int = 128, interpret: bool = True) -> jax.Array:
+    scale = (q.shape[-1] ** -0.5) if scale is None else scale
+    return flash_attention(q, k, v, block_q=min(block_q, q.shape[0]),
+                           block_k=min(block_k, k.shape[0]), scale=scale,
+                           causal=causal, interpret=interpret)

@@ -1,0 +1,93 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function mirrors one kernel's contract EXACTLY (same inputs incl.
+precomputed page indices / anchors) so tests sweep shapes and compare
+bit-for-meaning, not just "similar attention".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def pow2_encode(x: jax.Array) -> jax.Array:
+    """sign(x)·2^floor(log2|x|) with 0 → 0 (DLZS operand encoding)."""
+    ax = jnp.abs(x)
+    e = jnp.floor(jnp.log2(jnp.maximum(ax, 1e-30)))
+    return jnp.where(ax > 0, jnp.sign(x) * jnp.exp2(e), 0.0)
+
+
+def dlzs_page_importance_ref(q: jax.Array, khat: jax.Array, block_q: int,
+                             page: int, scale: float) -> jax.Array:
+    """Oracle for kernels/dlzs.py.
+
+    q: (Sq, d) int-valued f32 (already quantized), khat: (Sk, d) int-valued
+    f32.  Returns page importance (n_qb, n_pages): the predicted max score of
+    each KV page w.r.t. each query block — which doubles as the SU-FA anchor.
+    """
+    Sq, d = q.shape
+    Sk = khat.shape[0]
+    qt = pow2_encode(q)
+    s = (qt @ khat.T) * scale                      # (Sq, Sk) estimated scores
+    s = s.reshape(Sq // block_q, block_q, Sk // page, page)
+    return s.max(axis=(1, 3))                      # (n_qb, n_pages)
+
+
+def sufa_paged_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                   page_idx: jax.Array, anchor: jax.Array, page: int,
+                   scale: float, causal: bool) -> jax.Array:
+    """Oracle for kernels/sufa.py — exact attention over the selected pages.
+
+    q: (Sq, d); k/v: (Sk, d)/(Sk, dv); page_idx: (n_qb, k_pages) int32;
+    anchor: (n_qb,) f32 — the sorter-provided max used to anchor exps (result
+    is invariant to it; it only needs to prevent overflow).
+    """
+    Sq, d = q.shape
+    n_qb, k_pages = page_idx.shape
+    bq = Sq // n_qb
+    outs = []
+    for i in range(n_qb):
+        qb = q[i * bq:(i + 1) * bq]
+        tok = (page_idx[i][:, None] * page +
+               jnp.arange(page, dtype=jnp.int32)[None, :]).reshape(-1)
+        ks, vs = jnp.take(k, tok, axis=0), jnp.take(v, tok, axis=0)
+        s = (qb @ ks.T) * scale
+        if causal:
+            qpos = i * bq + jnp.arange(bq, dtype=jnp.int32)
+            s = jnp.where(tok[None, :] <= qpos[:, None], s, NEG_INF)
+        p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - anchor[i]))
+        l = p.sum(-1)
+        o = p @ vs
+        outs.append(o / jnp.maximum(l, 1e-30)[:, None])
+    return jnp.concatenate(outs, axis=0)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        scale: float, causal: bool) -> jax.Array:
+    """Oracle for kernels/flash.py (dense FA-2 baseline)."""
+    s = (q @ k.T) * scale
+    if causal:
+        # contract: query i sits at absolute position i (prefill, Sq == Sk)
+        Sq, Sk = s.shape
+        mask = jnp.arange(Sk)[None, :] <= jnp.arange(Sq)[:, None]
+        s = jnp.where(mask, s, NEG_INF)
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    return (p @ v) / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+
+
+def sads_topk_ref(scores: jax.Array, k_seg: int, n_seg: int):
+    """Oracle for kernels/topk.py.
+
+    scores: (R, S) → per-segment top-k_seg values and GLOBAL indices, each
+    (R, n_seg*k_seg), segment-grouped, values descending within a segment.
+    """
+    R, S = scores.shape
+    seg_len = S // n_seg
+    seg = scores.reshape(R, n_seg, seg_len)
+    vals, idx = jax.lax.top_k(seg, k_seg)
+    gidx = idx.astype(jnp.int32) + (jnp.arange(n_seg, dtype=jnp.int32) * seg_len)[None, :, None]
+    return vals.reshape(R, n_seg * k_seg), gidx.reshape(R, n_seg * k_seg)

@@ -1,0 +1,107 @@
+"""SU-FA paged attention Pallas kernel (the formal-compute stage on TPU).
+
+Grid: (n_q_blocks, k_pages) — for each 128-query block, stream its SELECTED
+KV pages (scalar-prefetched indices from the SADS stage drive the K/V
+BlockSpec index maps, i.e. the gather happens in the DMA engine, HBM→VMEM,
+page-granular — the TPU realization of the paper's on-demand KV fetch).
+
+The SU-FA insight in kernel form: the sorter already told us every page's
+(estimated) max, so the cross-tile running-max recurrence of FA-2 disappears
+— the anchor ``m̂ = max_j m̂_j`` is a *scalar known before the loop*.  Each
+tile does exp(s − m̂) + accumulate: no per-tile comparisons, no (l, o)
+rescale multiplies (Fig. 10(a) Eq. (2), descending order).  Softmax's shift
+invariance makes the output exact for ANY anchor; m̂ only guards the exp
+range (DLZS underestimation is bounded by its 2-octave mantissa truncation,
+far inside fp32 exp range — see tests/test_kernels.py::test_sufa_anchor_robust).
+
+VMEM working set per step: q block (Bq·d) + one K/V page (2·page·d) + o
+accumulator (Bq·dv) + l (Bq) — all MXU-aligned when Bq=page=128, d=dv=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _sufa_kernel(idx_ref, valid_ref, anchor_ref, q_ref, k_ref, v_ref, o_ref,
+                 l_ref, *, page: int, block_q: int, scale: float,
+                 causal: bool, k_pages: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        page_id = idx_ref[i, j]
+        tok = page_id * page + jax.lax.broadcasted_iota(jnp.int32, (block_q, page), 1)
+        qpos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, page), 0)
+        s = jnp.where(tok <= qpos, s, NEG_INF)
+
+    # Anchored exp — the single scalar that replaces FA-2's online max.
+    m_hat = anchor_ref[0, 0]
+    p = jnp.exp(s - m_hat)
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    # padding slots (selection produced < k_pages usable pages) contribute 0
+    p = p * valid_ref[i, j].astype(jnp.float32)
+
+    l_ref[...] += jnp.sum(p, axis=1)
+    o_ref[...] += jax.lax.dot_general(p, v_ref[...], (((1,), (0,)), ((), ())),
+                                      preferred_element_type=jnp.float32)
+
+    @pl.when(j == k_pages - 1)
+    def _epilogue():
+        # One division per row — Fig. 10(b) line 7.  (The m̂ factor cancels.)
+        o_ref[...] = o_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("page", "block_q", "scale",
+                                             "causal", "interpret"))
+def sufa_paged_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                         page_idx: jax.Array, anchor: jax.Array,
+                         valid: jax.Array | None = None,
+                         *, page: int = 128, block_q: int = 128,
+                         scale: float = 1.0, causal: bool = True,
+                         interpret: bool = True) -> jax.Array:
+    """q: (Sq, d), k/v: (Sk, d)/(Sk, dv), page_idx: (n_qb, k_pages) int32,
+    anchor: (n_qb,) f32, valid: (n_qb, k_pages) int32 0/1 (None = all valid).
+    Returns (Sq, dv) f32."""
+    Sq, d = q.shape
+    dv = v.shape[-1]
+    n_qb, k_pages = page_idx.shape
+    assert Sq == n_qb * block_q, (Sq, n_qb, block_q)
+    if valid is None:
+        valid = jnp.ones((n_qb, k_pages), jnp.int32)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_qb, k_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, idx, val: (i, 0)),        # anchor
+            pl.BlockSpec((block_q, d), lambda i, j, idx, val: (i, 0)),  # q
+            pl.BlockSpec((page, d), lambda i, j, idx, val: (idx[i, j], 0)),   # k
+            pl.BlockSpec((page, dv), lambda i, j, idx, val: (idx[i, j], 0)),  # v
+        ],
+        out_specs=pl.BlockSpec((block_q, dv), lambda i, j, idx, val: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((block_q,), jnp.float32)],      # l
+    )
+    kernel = functools.partial(_sufa_kernel, page=page, block_q=block_q,
+                               scale=scale, causal=causal, k_pages=k_pages)
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((Sq, dv), jnp.float32),
+        interpret=interpret,
+    )(page_idx, valid, anchor.reshape(n_qb, 1), q, k, v)

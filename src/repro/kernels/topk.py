@@ -1,0 +1,79 @@
+"""SADS segmented top-k Pallas kernel (top-k stage on TPU).
+
+Grid: (n_row_blocks, n_seg).  Each step selects the top-k_seg values of one
+segment for a block of rows by ITERATIVE MAX EXTRACTION — the same selection
+the paper's 16→4 bitonic core performs (k_seg is small by SADS construction,
+which is exactly why a k-round extraction beats a full sort).  The adaptive
+clipping rule (threshold = max(top-margin, running output-buffer min)) is
+applied as a VPU mask: clipped lanes are zeroed, matching the paper's
+"substitute blocked values with zeros" hardware choice.
+
+Outputs are segment-grouped (rows, n_seg·k_seg) values + GLOBAL indices —
+the FC-set layout SU-FA consumes directly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _topk_kernel(s_ref, val_ref, idx_ref, *, k_seg: int, seg_len: int,
+                 block_rows: int, clip_margin: float):
+    j = pl.program_id(1)
+    s = s_ref[...]                                   # (rows, seg_len)
+    col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+
+    # adaptive clipping: anything below (segment max − margin) can never
+    # reach the sorter's output buffer; zero those lanes (power proxy).
+    top_margin = jnp.max(s, axis=1, keepdims=True) - clip_margin
+    s = jnp.where(s >= top_margin, s, NEG_INF)
+
+    def body(t, carry):
+        s, vals, idxs = carry
+        m = jnp.max(s, axis=1)                       # (rows,)
+        am = jnp.argmax(s, axis=1).astype(jnp.int32)
+        vals = jax.lax.dynamic_update_slice(vals, m[:, None], (0, t))
+        gidx = j * seg_len + am
+        idxs = jax.lax.dynamic_update_slice(idxs, gidx[:, None], (0, t))
+        s = jnp.where(col == am[:, None], NEG_INF, s)
+        return s, vals, idxs
+
+    vals0 = jnp.full((block_rows, k_seg), NEG_INF, jnp.float32)
+    idxs0 = jnp.zeros((block_rows, k_seg), jnp.int32)
+    _, vals, idxs = jax.lax.fori_loop(0, k_seg, body, (s, vals0, idxs0))
+    val_ref[...] = vals
+    idx_ref[...] = idxs
+
+
+@functools.partial(jax.jit, static_argnames=("k_seg", "n_seg", "block_rows",
+                                             "clip_margin", "interpret"))
+def sads_topk(scores: jax.Array, *, k_seg: int, n_seg: int,
+              block_rows: int = 8, clip_margin: float = 1e30,
+              interpret: bool = True):
+    """scores: (R, S) → (values, global_indices) each (R, n_seg·k_seg)."""
+    R, S = scores.shape
+    assert S % n_seg == 0 and R % block_rows == 0
+    seg_len = S // n_seg
+    assert k_seg <= seg_len
+
+    kernel = functools.partial(_topk_kernel, k_seg=k_seg, seg_len=seg_len,
+                               block_rows=block_rows, clip_margin=clip_margin)
+    return pl.pallas_call(
+        kernel,
+        grid=(R // block_rows, n_seg),
+        in_specs=[pl.BlockSpec((block_rows, seg_len), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((block_rows, k_seg), lambda i, j: (i, j)),
+            pl.BlockSpec((block_rows, k_seg), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, n_seg * k_seg), jnp.float32),
+            jax.ShapeDtypeStruct((R, n_seg * k_seg), jnp.int32),
+        ],
+        interpret=interpret,
+    )(scores)

@@ -1,0 +1,264 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+#   512 placeholder host devices back the production meshes (16×16 single
+#   pod, 2×16×16 multi-pod).  Never set this for tests/benches (they want
+#   the real single device) — which is why it lives here and nowhere else.
+
+__doc__ = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell:  jit(step).lower(abstract inputs) → compile →
+memory_analysis (proves HBM fit) + cost_analysis (FLOPs/bytes) +
+collective-bytes parse of the post-SPMD HLO (ICI vs DCN split via
+replica_groups) → JSON artifact in results/dryrun/ + stdout summary.
+
+Usage:
+  python -m repro.launch.dryrun                      # full matrix
+  python -m repro.launch.dryrun --arch qwen3-4b --shape prefill_32k
+  python -m repro.launch.dryrun --mesh multi --attn dense
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import SHAPES, get_config, shape_cells
+from repro.configs.all import ASSIGNED  # noqa: E402
+from repro.distributed import step as step_lib
+from repro.launch.mesh import make_production_mesh
+from repro.roofline import hlo_analysis
+
+# --- hardware constants (TPU v5e) ------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+DCN_BW = 25e9                # bytes/s per host (cross-pod)
+HBM_BYTES = 16 * 2 ** 30     # v5e HBM capacity
+POD_SIZE = 256
+
+# per-arch gradient-accumulation for train_4k (memory fit; see §Dry-run)
+ACCUM_OVERRIDES = {
+    "qwen3-moe-235b-a22b": 4,
+    "recurrentgemma-9b": 4,
+    "granite-20b": 2,
+    "nemotron-4-15b": 2,
+    "deepseek-v2-lite-16b": 2,
+    "llava-next-mistral-7b": 2,
+    "llama7b": 2,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\([^)]*\)|[a-z0-9]+\[[^\]]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*?(replica_groups=\S+)?", re.M)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo: str) -> dict:
+    """Sum collective bytes from post-SPMD HLO, split ICI vs DCN (a group
+    spanning devices ≥ POD_SIZE apart crosses pods → DCN)."""
+    out = {"ici": 0.0, "dcn": 0.0, "by_op": {}}
+    for line in hlo.splitlines():
+        m = re.search(r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[^\]]*\]\S*))\s+"
+                      r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                      r"collective-permute)", line)
+        if not m:
+            continue
+        shape_txt, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_txt)
+        mult = 2.0 if op == "all-reduce" else 1.0    # ring AR moves 2× bytes
+        eff = nbytes * mult
+        is_dcn = False
+        gm = re.search(r"replica_groups=\{\{([0-9,]+)", line)
+        if gm:
+            ids = [int(x) for x in gm.group(1).split(",") if x]
+            if ids and (max(ids) - min(ids)) >= POD_SIZE:
+                is_dcn = True
+        out["dcn" if is_dcn else "ici"] += eff
+        out["by_op"][op] = out["by_op"].get(op, 0.0) + eff
+    return out
+
+
+def pick_attn(cfg, shape_name: str, attn_override: str | None) -> str:
+    if attn_override:
+        return attn_override
+    if cfg.sofa is None:
+        return "dense"
+    kind = SHAPES[shape_name].kind
+    return "dense" if kind == "train" else "sofa"
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             attn: str | None = None, out_dir: str = "results/dryrun") -> dict:
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    cfg = get_config(arch)
+    attn_impl = pick_attn(cfg, shape_name, attn)
+    cfg = dataclasses.replace(cfg, attn_impl=attn_impl)
+
+    # gradient-accumulation microbatching for the biggest training cells —
+    # the standard lever when per-device activations exceed HBM
+    accum = ACCUM_OVERRIDES.get(arch, 1) if SHAPES[shape_name].kind == "train" else 1
+
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "attn": attn_impl, "chips": mesh.devices.size,
+        "params": cfg.param_count(), "active_params": cfg.active_param_count(),
+        "accum": accum,
+    }
+    t0 = time.time()
+    if shape.is_decode:
+        lowered, _ = step_lib.lower_serve(cfg, mesh, shape)
+        step_kind = "serve_step"
+    elif shape.kind == "prefill":
+        lowered, _ = step_lib.lower_prefill(cfg, mesh, shape)
+        step_kind = "prefill_step"
+    else:
+        lowered, _ = step_lib.lower_train(cfg, mesh, shape, accum=accum)
+        step_kind = "train_step"
+    rec["step"] = step_kind
+    rec["lower_s"] = round(time.time() - t0, 1)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "peak_bytes": (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                       + mem.temp_size_in_bytes - mem.alias_size_in_bytes),
+    }
+    rec["fits_hbm"] = rec["memory"]["peak_bytes"] < HBM_BYTES
+
+    # trip-count-aware accounting (compiled.cost_analysis counts while
+    # bodies once — useless for scan-over-layers; see roofline/hlo_analysis)
+    cost = compiled.cost_analysis() or {}
+    rec["xla_flops_once"] = float(cost.get("flops", 0.0))
+    t0 = time.time()
+    hlo = hlo_analysis.analyze(compiled.as_text(), pod_size=POD_SIZE)
+    rec["analyze_s"] = round(time.time() - t0, 1)
+    rec["flops_per_chip"] = hlo["flops"]
+    rec["bytes_per_chip"] = hlo["bytes"]
+    coll = hlo["collective"]
+    rec["collective"] = {"ici_bytes": coll["ici"], "dcn_bytes": coll["dcn"],
+                         "by_op": coll["by_op"],
+                         "static_count": coll["static_count"]}
+
+    # --- roofline terms (seconds) ---------------------------------------
+    rec["t_compute"] = rec["flops_per_chip"] / PEAK_FLOPS
+    rec["t_memory"] = rec["bytes_per_chip"] / HBM_BW
+    rec["t_collective"] = coll["ici"] / ICI_BW + coll["dcn"] / DCN_BW
+    terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+             "collective": rec["t_collective"]}
+    rec["bottleneck"] = max(terms, key=terms.get)
+
+    # MODEL_FLOPS: useful FLOPs for this step (per chip)
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    mult = 6 if step_kind == "train_step" else 2
+    rec["model_flops_per_chip"] = (
+        mult * rec["active_params"] * tokens / mesh.devices.size)
+    rec["useful_ratio"] = (rec["model_flops_per_chip"] /
+                           max(rec["flops_per_chip"], 1.0))
+
+    # Pallas-kernel-projected memory term for SOFA prefill cells: the fused
+    # kernels (kernels/dlzs.py + kernels/sufa.py, validated in interpret
+    # mode) keep Â tiles in VMEM; HBM traffic is q/k/v + output + the
+    # page-importance matrix + the gathered selected pages.  The XLA
+    # fallback measured above pays every fusion boundary — an upper bound
+    # the TPU kernel path does not.
+    if attn_impl.startswith("sofa") and shape.kind == "prefill" and cfg.sofa:
+        B, S = shape.global_batch, shape.seq_len
+        H, hd, kv = cfg.n_heads, cfg.head_dim, cfg.n_kv_heads
+        kf = cfg.sofa.k_frac
+        layers = sum(1 for kd in cfg.layer_kinds()
+                     if kd.split("+")[0] in ("attn", "local_attn", "mla"))
+        n_blocks = S // cfg.sofa.block_q
+        per_layer_head = (
+            S * hd * 2 * 2              # q read by predict + formal stages
+            + 2 * S * hd * 2            # k, v read by the predict stage
+            + S * hd * 4                # output f32
+            + n_blocks * (S // cfg.sofa.page) * 4          # importance matrix
+            + n_blocks * int(kf * S) * 2 * hd * 2          # per-block paged
+        )                                                  #   K/V DMA gathers
+        rec["kernel_projected_bytes_per_chip"] = (
+            layers * B * H * per_layer_head / mesh.devices.size)
+        rec["t_memory_kernel"] = (rec["kernel_projected_bytes_per_chip"]
+                                  / HBM_BW)
+
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{mesh_kind}__{attn_impl}"
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(f"[dryrun] {tag}: compile={rec['compile_s']}s "
+          f"peak={rec['memory']['peak_bytes']/2**30:.2f}GiB "
+          f"fits={rec['fits_hbm']} "
+          f"t_comp={rec['t_compute']*1e3:.2f}ms t_mem={rec['t_memory']*1e3:.2f}ms "
+          f"t_coll={rec['t_collective']*1e3:.2f}ms → {rec['bottleneck']}")
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default=None, choices=["single", "multi"])
+    ap.add_argument("--attn", default=None,
+                    choices=["dense", "sofa", "sofa_kernel"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    meshes = [args.mesh] if args.mesh else ["single", "multi"]
+
+    failures = []
+    for arch in archs:
+        cells = [args.shape] if args.shape else shape_cells(arch)
+        for shape_name in cells:
+            for mesh_kind in meshes:
+                cfg0 = get_config(arch)
+                attn_impl = pick_attn(cfg0, shape_name, args.attn)
+                tag = f"{arch}__{shape_name}__{mesh_kind}__{attn_impl}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[dryrun] skip existing {tag}")
+                    continue
+                try:
+                    run_cell(arch, shape_name, mesh_kind, args.attn, args.out)
+                except Exception as e:  # noqa: BLE001 — record, keep going
+                    failures.append((tag, repr(e)))
+                    print(f"[dryrun] FAIL {tag}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n[dryrun] {len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err}")
+        raise SystemExit(1)
+    print("\n[dryrun] all cells passed")
+
+
+if __name__ == "__main__":
+    main()

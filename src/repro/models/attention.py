@@ -1,0 +1,745 @@
+"""Attention mixers: GQA/MQA flash (XLA), local-window, MLA, and the SOFA
+sparse backend — selectable per model via ``cfg.attn_impl``.
+
+The XLA flash path is the memory-safe dense baseline (two-level tiling:
+``lax.map`` over Q blocks, ``lax.scan`` over KV tiles with the FA-2 online
+softmax).  The SOFA path routes through repro.core.pipeline (pure XLA, used
+by the distributed dry-run) or repro.kernels.ops (Pallas, TPU runtime).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pipeline as sofa_pipeline
+from repro.models import common
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# dense flash attention in XLA (baseline formal stage)
+# ---------------------------------------------------------------------------
+
+def xla_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool, q_block: int = 512,
+                        kv_block: int = 1024) -> jax.Array:
+    """q: (B, Sq, H, hd), k/v: (B, Sk, Kh, hd) with H = G·Kh → (B, Sq, H, dv).
+
+    Layout-preserving FA-2 in XLA: every tensor stays (batch, seq, heads, hd)
+    — batch on dp, heads on tp — so SPMD propagation never reshards
+    activations (head-splitting reshapes of a tp-sharded dim were the
+    collective blow-up of the first baseline; EXPERIMENTS.md §Perf).
+    GQA KV is broadcast to H heads (transient, bf16).  bf16 operands / f32
+    accumulation (MXU idiom).
+    """
+    from repro.distributed.act_sharding import shard_act
+
+    B, Sq, H, hd = q.shape
+    Sk, Kh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                    # may differ from hd (MLA)
+    scale = hd ** -0.5
+    if Kh != H:
+        k = shard_act(jnp.repeat(k, H // Kh, axis=2), "bthd")
+        v = shard_act(jnp.repeat(v, H // Kh, axis=2), "bthd")
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Sk)
+    nq, nk = Sq // q_block, Sk // kv_block
+
+    def one_qblock(carry, qi):
+        out_buf = carry
+        qblk = jax.lax.dynamic_slice_in_dim(q, qi * q_block, q_block, axis=1)
+        qpos = qi * q_block + jnp.arange(q_block)
+
+        def kv_step(inner, j):
+            m, l, acc = inner
+            ks = jax.lax.dynamic_slice_in_dim(k, j * kv_block, kv_block, 1)
+            vs = jax.lax.dynamic_slice_in_dim(v, j * kv_block, kv_block, 1)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qblk, ks,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                kpos = j * kv_block + jnp.arange(kv_block)
+                s = jnp.where(kpos[None, None, None, :]
+                              <= qpos[None, None, :, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.where(m <= NEG_INF / 2, 0.0, jnp.exp(m - m_new))
+            p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[..., None]))
+            l = l * alpha + p.sum(-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(vs.dtype), vs,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, H, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_block), jnp.float32)
+        a0 = jnp.zeros((B, H, q_block, dv), jnp.float32)
+        # remat the kv steps: the backward recomputes the (qb × kv) score
+        # tile instead of storing every tile (flash-backward semantics —
+        # without this the residuals are O(S²) and blow HBM)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step, prevent_cse=False),
+            (m0, l0, a0), jnp.arange(nk))
+        o = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        o = o.transpose(0, 2, 1, 3)                     # (B, qb, H, dv)
+        out_buf = jax.lax.dynamic_update_slice_in_dim(
+            out_buf, o, qi * q_block, axis=1)
+        return out_buf, None
+
+    out0 = jnp.zeros((B, Sq, H, dv), q.dtype)
+    out, _ = jax.lax.scan(jax.checkpoint(one_qblock, prevent_cse=False),
+                          out0, jnp.arange(nq))
+    return out
+
+
+def xla_flash_attention_seqsharded(q: jax.Array, k: jax.Array, v: jax.Array,
+                                   *, causal: bool, ctx) -> jax.Array:
+    """Sequence-parallel flash attention (§Perf hillclimb cell 2, iter 5).
+
+    When n_heads doesn't divide the ``model`` axis (minicpm's 36, whisper's
+    8), pjit-auto REPLICATES the head dim — every chip computes every head
+    (16× redundant flops AND 16× the score-tile bytes).  Q blocks are
+    independent, so instead each model shard takes a contiguous S/tp query
+    span for ALL heads, with K/V replicated: compute and score-tile traffic
+    drop by tp, no extra collectives (K/V were already dp-replicated).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    B, S, H, hd = q.shape
+    mesh = ctx["mesh"]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    dp_axes = ctx["dp"] if isinstance(ctx["dp"], tuple) else (
+        (ctx["dp"],) if ctx["dp"] else ())
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= sizes[a]
+    bspec = (ctx["dp"] if (dp_size > 1 and B % dp_size == 0) else None)
+    S_loc = S // tp
+
+    def body(qb, kb, vb):
+        mi = jax.lax.axis_index("model")
+        offset = mi * S_loc
+
+        def one_qblock(carry, qi):
+            out_buf = carry
+            blk = min(512, S_loc)
+            qblk = jax.lax.dynamic_slice_in_dim(qb, qi * blk, blk, axis=1)
+            qpos = offset + qi * blk + jnp.arange(blk)
+
+            def kv_step(inner, j):
+                m, l, acc = inner
+                kvb = min(1024, S)
+                ks = jax.lax.dynamic_slice_in_dim(kb, j * kvb, kvb, 1)
+                vs = jax.lax.dynamic_slice_in_dim(vb, j * kvb, kvb, 1)
+                s = jnp.einsum("bqhd,bkhd->bhqk", qblk, ks,
+                               preferred_element_type=jnp.float32) * (hd ** -0.5)
+                if causal:
+                    kpos = j * kvb + jnp.arange(kvb)
+                    s = jnp.where(kpos[None, None, None, :]
+                                  <= qpos[None, None, :, None], s, NEG_INF)
+                m_new = jnp.maximum(m, s.max(-1))
+                alpha = jnp.where(m <= NEG_INF / 2, 0.0, jnp.exp(m - m_new))
+                p = jnp.where(s <= NEG_INF / 2, 0.0,
+                              jnp.exp(s - m_new[..., None]))
+                l = l * alpha + p.sum(-1)
+                acc = acc * alpha[..., None] + jnp.einsum(
+                    "bhqk,bkhd->bhqd", p.astype(vs.dtype), vs,
+                    preferred_element_type=jnp.float32)
+                return (m_new, l, acc), None
+
+            blk_n = S // min(1024, S)
+            m0 = jnp.full((qb.shape[0], H, blk), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((qb.shape[0], H, blk), jnp.float32)
+            a0 = jnp.zeros((qb.shape[0], H, blk, v.shape[-1]), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(
+                jax.checkpoint(kv_step, prevent_cse=False),
+                (m0, l0, a0), jnp.arange(blk_n))
+            o = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(qb.dtype)
+            out_buf = jax.lax.dynamic_update_slice_in_dim(
+                out_buf, o.transpose(0, 2, 1, 3), qi * blk, axis=1)
+            return out_buf, None
+
+        blk = min(512, S_loc)
+        out0 = jnp.zeros(qb.shape[:3] + (v.shape[-1],), qb.dtype)
+        out, _ = jax.lax.scan(jax.checkpoint(one_qblock, prevent_cse=False),
+                              out0, jnp.arange(S_loc // blk))
+        return out
+
+    Kh = k.shape[2]
+    if Kh != H:
+        k = jnp.repeat(k, H // Kh, axis=2)
+        v = jnp.repeat(v, H // Kh, axis=2)
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, "model", None, None),
+                  P(bspec, None, None, None),
+                  P(bspec, None, None, None)),
+        out_specs=P(bspec, "model", None, None),
+        check_rep=False,
+    )(q, k, v)
+
+
+def local_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          window: int, q_block: int = 512) -> jax.Array:
+    """Causal local-window attention: position p attends (p-window, p].
+
+    Work and memory are O(S·window), not O(S²): each Q block slices only its
+    reachable KV span.
+    """
+    from repro.distributed.act_sharding import shard_act
+
+    B, S, H, hd = q.shape
+    Kh = k.shape[2]
+    scale = hd ** -0.5
+    if Kh != H:
+        k = shard_act(jnp.repeat(k, H // Kh, axis=2), "bthd")
+        v = shard_act(jnp.repeat(v, H // Kh, axis=2), "bthd")
+    q_block = min(q_block, S)
+    nq = S // q_block
+    span = min(window + q_block, S)     # kv span a q-block can reach
+
+    def one_qblock(carry, qi):
+        out_buf = carry
+        qstart = qi * q_block
+        qblk = jax.lax.dynamic_slice_in_dim(q, qstart, q_block, axis=1)
+        start = jnp.clip(qstart + q_block - span, 0, S - span)
+        ks = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qblk, ks,
+                       preferred_element_type=jnp.float32) * scale
+        qpos = qstart + jnp.arange(q_block)
+        kpos = start + jnp.arange(span)
+        ok = (kpos[None, :] <= qpos[:, None]) & \
+             (kpos[None, :] > qpos[:, None] - window)
+        s = jnp.where(ok[None, None], s, NEG_INF)
+        m = s.max(-1, keepdims=True)
+        p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m))
+        o = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vs.dtype), vs,
+                       preferred_element_type=jnp.float32)
+        o = (o / jnp.maximum(p.sum(-1), 1e-30)[..., None]).astype(q.dtype)
+        out_buf = jax.lax.dynamic_update_slice_in_dim(
+            out_buf, o.transpose(0, 2, 1, 3), qstart, axis=1)
+        return out_buf, None
+
+    out0 = jnp.zeros((B, S, H, hd), q.dtype)
+    out, _ = jax.lax.scan(jax.checkpoint(one_qblock, prevent_cse=False),
+                          out0, jnp.arange(nq))
+    return out
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, ring: bool = False) -> jax.Array:
+    """One-token decode. q: (B, 1, H, hd), k/v: (B, C, Kh, hd); kv_len: valid
+    length (linear cache) or total steps written (ring cache)."""
+    B, _, H, hd = q.shape
+    C, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    scale = hd ** -0.5
+    qh = q.reshape(B, Kh, G, hd)
+    s = jnp.einsum("bhgd,bchd->bhgc", qh.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    idx = jnp.arange(C)
+    valid = (idx < kv_len) if not ring else (idx < jnp.minimum(kv_len, C))
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgc,bchd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SOFA sparse backend (the paper's technique, per head via vmap)
+# ---------------------------------------------------------------------------
+
+def sofa_prefill_sharded(q: jax.Array, k: jax.Array, v: jax.Array,
+                         cfg: sofa_pipeline.SOFAConfig, ctx) -> jax.Array:
+    """Head-local SOFA prefill under shard_map (§Perf hillclimb iter 1).
+
+    Every per-head pipeline stage (DLZS tile predict → page select →
+    paged SU-FA) is embarrassingly parallel over heads — so heads stay on
+    their ``model`` shard and the ONLY data movement is the (already
+    dp-replicated-over-model) K/V input.  The pjit-auto version of this
+    path resharded the (tp-sharded) head dim inside a 256-trip Q-block loop
+    → the 6.4e3-second collective term of the baseline table.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    B, S, H, hd = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    mesh = ctx["mesh"]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    dp_axes = ctx["dp"] if isinstance(ctx["dp"], tuple) else (
+        (ctx["dp"],) if ctx["dp"] else ())
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= sizes[a]
+    bspec = (ctx["dp"] if (dp_size > 1 and B % dp_size == 0) else None)
+    head_sharded = H % tp == 0
+    H_loc = H // tp if head_sharded else H
+    S_loc = S // tp
+
+    def body(qb, kb, vb):
+        mi = jax.lax.axis_index("model")
+        if head_sharded:
+            # local heads' kv-group indices (gather from the replicated K/V)
+            hids = mi * H_loc + jnp.arange(H_loc)
+            offset = 0
+        else:
+            # sequence-parallel fallback (H doesn't divide the mesh —
+            # minicpm 36H, whisper 8H): each shard takes an S/tp query span
+            # for ALL heads; q_offset keeps causality/page visibility global
+            hids = jnp.arange(H)
+            offset = mi * S_loc
+        kvids = hids // G
+        kl = jnp.take(kb, kvids, axis=2)          # (B_loc, S, H_loc, hd)
+        vl = jnp.take(vb, kvids, axis=2)
+
+        def head_fn(qh, kh, vh):                  # (S_q_loc, hd) each
+            return sofa_pipeline.sofa_prefill_attention(
+                qh, kh, vh, cfg, causal=True, q_offset=offset)
+
+        # outer vmap peels batch (axis 0); heads then sit at axis 1.
+        # activations stay bf16 — every matmul inside accumulates f32 via
+        # preferred_element_type (§Perf iter 3)
+        f = jax.vmap(jax.vmap(head_fn, in_axes=(1, 1, 1), out_axes=1))
+        return f(qb, kl, vl).astype(qb.dtype)
+
+    qspec = P(bspec, None, "model", None) if head_sharded \
+        else P(bspec, "model", None, None)
+    out = shard_map(
+        body, mesh=mesh,
+        in_specs=(qspec,
+                  P(bspec, None, None, None),
+                  P(bspec, None, None, None)),
+        out_specs=qspec,
+        check_rep=False,
+    )(q, k, v)
+    return out
+
+
+def sofa_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
+                 cfg: sofa_pipeline.SOFAConfig, use_kernel: bool) -> jax.Array:
+    """q: (B, S, H, hd), k/v: (B, S, Kh, hd) → (B, S, H, hd), causal."""
+    from repro.distributed import act_sharding
+
+    B, S, H, hd = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+
+    ctx = act_sharding._CTX.get()
+    if (ctx is not None and not use_kernel and ctx["tp"] is not None):
+        tp = dict(zip(ctx["mesh"].axis_names,
+                      ctx["mesh"].devices.shape)).get("model", 1)
+        if (H % tp == 0 and H >= tp) or \
+           (S % tp == 0 and (S // tp) % cfg.block_q == 0):
+            return sofa_prefill_sharded(q, k, v, cfg, ctx)
+
+    if use_kernel:
+        from repro.kernels import ops as kops
+
+        def head_fn(qh, kh, vh):
+            return kops.sofa_attention_kernel(qh, kh, vh, cfg, causal=True)
+    else:
+        def head_fn(qh, kh, vh):
+            return sofa_pipeline.sofa_prefill_attention(qh, kh, vh, cfg,
+                                                        causal=True)
+
+    # axes: batch, kv-head, group — q heads in a group share the kv head's K/V
+    qg = q.reshape(B, S, Kh, G, hd).transpose(0, 2, 3, 1, 4)  # (B, Kh, G, S, hd)
+    kg = k.transpose(0, 2, 1, 3)           # (B, Kh, S, hd)
+    vg = v.transpose(0, 2, 1, 3)
+
+    def per_b(qb, kb, vb):
+        def per_kvh(qk, kk, vk):
+            return jax.vmap(lambda qq: head_fn(qq, kk, vk))(qk)
+        return jax.vmap(per_kvh)(qb, kb, vb)
+
+    out = jax.vmap(per_b)(qg.astype(jnp.float32), kg.astype(jnp.float32),
+                          vg.astype(jnp.float32))   # (B, Kh, G, S, dv)
+    dv = v.shape[-1]                                # may differ from hd (MLA)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, dv).astype(q.dtype)
+
+
+def sofa_decode_sharded(q: jax.Array, k: jax.Array, v: jax.Array,
+                        kv_len: jax.Array, cfg: sofa_pipeline.SOFAConfig,
+                        ctx) -> jax.Array:
+    """Flash-decoding SOFA (§Perf hillclimb cell 3): the KV cache is already
+    sequence-sharded over ``model`` (distributed/sharding.py), and SADS's
+    distributed sorting maps 1:1 onto the shards — each shard IS a segment:
+    it predicts scores for its cache slice, takes its local top-(k/n), and
+    computes a partial SU-FA (m, l, o).  The cross-segment synchronization
+    of Fig. 10(b) lines 5–6 becomes exactly one pmax + two psums.  The
+    pjit-auto version gathered the sharded cache per head per layer —
+    the 6.7-second decode collective term of the baseline.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    B, _, H, hd = q.shape
+    C, Kh = k.shape[1], k.shape[2]
+    G = H // Kh
+    dv = v.shape[-1]
+    mesh = ctx["mesh"]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get("model", 1)
+    dp_axes = ctx["dp"] if isinstance(ctx["dp"], tuple) else (
+        (ctx["dp"],) if ctx["dp"] else ())
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= sizes[a]
+    bspec = (ctx["dp"] if (dp_size > 1 and B % dp_size == 0) else None)
+    C_loc = C // tp
+    scale = hd ** -0.5
+    k_loc = max(1, int(round(cfg.k_frac * C)) // tp)
+
+    def body(qb, kb, vb, kvl):
+        mi = jax.lax.axis_index("model")
+        gidx = mi * C_loc + jnp.arange(C_loc)
+        valid = gidx < kvl                                  # (C_loc,)
+        Bl = qb.shape[0]
+        qh = qb.reshape(Bl, Kh, G, hd)
+
+        # stage 1: DLZS prediction on the local cache slice (differential:
+        # Q in the log domain; the cache is read ONCE at its native bf16 —
+        # an f32 quantized copy would 3× the dominant decode traffic,
+        # §Perf iter 8).  The prediction matmul accumulates in f32.
+        qt = _pow2_like(qh.astype(jnp.float32)).astype(kb.dtype)
+        ahat = jnp.einsum("bkgd,bckd->bkgc", qt, kb,
+                          preferred_element_type=jnp.float32) * scale
+        ahat = jnp.where(valid[None, None, None, :], ahat, NEG_INF)
+
+        # stage 2: local top-(k/n) — this shard IS one SADS segment
+        _, idx = jax.lax.top_k(ahat, k_loc)                 # (B,Kh,G,k_loc)
+
+        # stage 3: partial SU-FA over the selected local tokens
+        kbh = kb.transpose(0, 2, 1, 3)[:, :, None]          # (B,Kh,1,C,hd)
+        vbh = vb.transpose(0, 2, 1, 3)[:, :, None]
+        ksel = jnp.take_along_axis(kbh, idx[..., None], axis=3)
+        vsel = jnp.take_along_axis(vbh, idx[..., None], axis=3)
+        # native-dtype operands, f32 accumulation — no f32 cache copies
+        s = jnp.einsum("bkgd,bkgnd->bkgn", qh.astype(ksel.dtype), ksel,
+                       preferred_element_type=jnp.float32) * scale
+        sel_valid = jnp.take_along_axis(
+            jnp.broadcast_to(valid[None, None, None, :], ahat.shape),
+            idx, axis=-1)
+        s = jnp.where(sel_valid, s, NEG_INF)
+        m = jnp.max(s, axis=-1)                             # (B,Kh,G)
+        p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m[..., None]))
+        l = p.sum(-1)
+        o = jnp.einsum("bkgn,bkgnd->bkgd", p.astype(vsel.dtype), vsel,
+                       preferred_element_type=jnp.float32)
+
+        # cross-segment synchronization (Fig. 10(b) lines 5–6): one round
+        m_g = jax.lax.pmax(m, "model")
+        w = jnp.where(m <= NEG_INF / 2, 0.0, jnp.exp(m - m_g))
+        l_g = jax.lax.psum(l * w, "model")
+        o_g = jax.lax.psum(o * w[..., None], "model")
+        out = o_g / jnp.maximum(l_g, 1e-30)[..., None]
+        return out.reshape(Bl, 1, H, dv).astype(qb.dtype)
+
+    return shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bspec, None, None, None),
+                  P(bspec, "model", None, None),
+                  P(bspec, "model", None, None),
+                  P()),
+        out_specs=P(bspec, None, None, None),
+        check_rep=False,
+    )(q, k, v, jnp.asarray(kv_len, jnp.int32))
+
+
+def _pow2_like(x: jax.Array) -> jax.Array:
+    ax = jnp.abs(x)
+    e = jnp.floor(jnp.log2(jnp.maximum(ax, 1e-30)))
+    return jnp.where(ax > 0, jnp.sign(x) * jnp.exp2(e), 0.0)
+
+
+def sofa_decode(q: jax.Array, k: jax.Array, v: jax.Array, kv_len: jax.Array,
+                cfg: sofa_pipeline.SOFAConfig) -> jax.Array:
+    """q: (B, 1, H, hd), k/v cache: (B, C, Kh, hd) → (B, 1, H, hd)."""
+    from repro.distributed import act_sharding
+
+    B, _, H, hd = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+
+    ctx = act_sharding._CTX.get()
+    if ctx is not None and ctx["tp"] is not None:
+        tp = dict(zip(ctx["mesh"].axis_names,
+                      ctx["mesh"].devices.shape)).get("model", 1)
+        if tp > 1 and k.shape[1] % tp == 0 and k.shape[1] // tp >= 64:
+            return sofa_decode_sharded(q, k, v, kv_len, cfg, ctx)
+
+    qg = q.reshape(B, Kh, G, hd)
+
+    def per_b(qb, kb, vb):
+        def per_kvh(qk, kk, vk):
+            return jax.vmap(lambda qq: sofa_pipeline.sofa_decode_attention(
+                qq, kk, vk, cfg, cache_len=kv_len))(qk)
+        return jax.vmap(per_kvh)(qb, kb, vb)
+
+    out = jax.vmap(per_b)(qg.astype(jnp.float32),
+                          k.transpose(0, 2, 1, 3).astype(jnp.float32),
+                          v.transpose(0, 2, 1, 3).astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# standard attention block (GQA / MQA / MHA, optional qk-norm, local window)
+# ---------------------------------------------------------------------------
+
+def init_attention(cfg, key) -> dict:
+    d, H, Kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": common.dense_init(ks[0], d, H * hd, cfg.pdtype),
+        "wk": common.dense_init(ks[1], d, Kh * hd, cfg.pdtype),
+        "wv": common.dense_init(ks[2], d, Kh * hd, cfg.pdtype),
+        "wo": common.dense_init(ks[3], H * hd, d, cfg.pdtype),
+    }
+    if cfg.qk_norm:
+        p["qn"] = common.init_rmsnorm(hd, cfg.pdtype)
+        p["kn"] = common.init_rmsnorm(hd, cfg.pdtype)
+    return p
+
+
+def init_kv_cache(cfg, batch: int, cache_len: int, local: bool = False) -> dict:
+    Kh, hd = cfg.n_kv_heads, cfg.head_dim
+    C = min(cache_len, cfg.local_window) if (local and cfg.local_window) else cache_len
+    if cfg.kv_cache_dtype == "int8":
+        return {
+            "k": jnp.zeros((batch, C, Kh, hd), jnp.int8),
+            "v": jnp.zeros((batch, C, Kh, hd), jnp.int8),
+            "ks": jnp.zeros((batch, C, Kh), jnp.bfloat16),   # per-token scale
+            "vs": jnp.zeros((batch, C, Kh), jnp.bfloat16),
+        }
+    return {
+        "k": jnp.zeros((batch, C, Kh, hd), cfg.adtype),
+        "v": jnp.zeros((batch, C, Kh, hd), cfg.adtype),
+    }
+
+
+def _kv_quant(x: jax.Array):
+    """Per-(token, head) symmetric int8. x: (B, S, Kh, hd) → (q, scale)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _kv_dequant(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None]).astype(dtype)
+
+
+def cache_kv(cache: dict, dtype) -> tuple[jax.Array, jax.Array]:
+    """Read a cache as (k, v) in compute dtype, dequantizing if int8."""
+    if "ks" in cache:
+        return (_kv_dequant(cache["k"], cache["ks"], dtype),
+                _kv_dequant(cache["v"], cache["vs"], dtype))
+    return cache["k"], cache["v"]
+
+
+def apply_attention(cfg, p, x: jax.Array, pos: jax.Array, *, mode: str,
+                    cache: dict | None = None, local: bool = False,
+                    causal: bool = True) -> tuple[jax.Array, dict | None]:
+    """mode: "full" (train/prefill over the whole sequence) or "decode".
+
+    pos: (S,) absolute positions (full) or scalar step (decode).
+    Returns (out (B,S,d), new_cache).
+    """
+    from repro.distributed.act_sharding import shard_act
+
+    B, S, d = x.shape
+    H, Kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = shard_act((x @ p["wq"]).reshape(B, S, H, hd), "bthd")
+    k = shard_act((x @ p["wk"]).reshape(B, S, Kh, hd), "bthd")
+    v = shard_act((x @ p["wv"]).reshape(B, S, Kh, hd), "bthd")
+    if cfg.qk_norm:
+        q = common.rmsnorm(p["qn"], q, cfg.norm_eps)
+        k = common.rmsnorm(p["kn"], k, cfg.norm_eps)
+    q = common.apply_rope(q, pos, cfg.rope_theta)
+    k = common.apply_rope(k, pos, cfg.rope_theta)
+
+    new_cache = cache
+    if mode == "decode":
+        assert cache is not None and S == 1
+        C = cache["k"].shape[1]
+        slot = (pos % C) if (local and cfg.local_window) else pos  # ring vs linear
+        # dynamic_update_slice, NOT .at[].set — the latter lowers to a
+        # whole-buffer select fusion (reads+writes the full cache per step;
+        # §Perf iter 8)
+        if "ks" in cache:                           # int8 quantized cache
+            kq, ksc = _kv_quant(k)
+            vq, vsc = _kv_quant(v)
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(cache["k"], kq,
+                                                  (0, slot, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(cache["v"], vq,
+                                                  (0, slot, 0, 0)),
+                "ks": jax.lax.dynamic_update_slice(cache["ks"], ksc,
+                                                   (0, slot, 0)),
+                "vs": jax.lax.dynamic_update_slice(cache["vs"], vsc,
+                                                   (0, slot, 0)),
+            }
+        else:
+            new_cache = {
+                "k": jax.lax.dynamic_update_slice(
+                    cache["k"], k.astype(cfg.adtype), (0, slot, 0, 0)),
+                "v": jax.lax.dynamic_update_slice(
+                    cache["v"], v.astype(cfg.adtype), (0, slot, 0, 0)),
+            }
+        kv_len = pos + 1
+        ck, cv = cache_kv(new_cache, cfg.adtype)
+        if cfg.attn_impl in ("sofa", "sofa_kernel") and not local:
+            o = sofa_decode(q, ck, cv, kv_len, cfg.sofa)
+        else:
+            o = decode_attention(q, ck, cv, kv_len,
+                                 ring=bool(local and cfg.local_window))
+    else:
+        from repro.distributed import act_sharding
+        ctx = act_sharding._CTX.get()
+        tp = 1
+        if ctx is not None and ctx["tp"] is not None:
+            tp = dict(zip(ctx["mesh"].axis_names,
+                          ctx["mesh"].devices.shape)).get("model", 1)
+        if local and cfg.local_window and S > cfg.local_window:
+            o = local_flash_attention(q, k, v, window=cfg.local_window)
+        elif cfg.attn_impl in ("sofa", "sofa_kernel") and causal and S > cfg.sofa.page:
+            o = sofa_prefill(q, k, v, cfg.sofa,
+                             use_kernel=cfg.attn_impl == "sofa_kernel")
+        elif (tp > 1 and H % tp and S % tp == 0 and S // tp >= 128):
+            # heads don't divide the model axis → sequence-parallel shard_map
+            # (otherwise SPMD replicates all heads on every chip; §Perf iter 5)
+            o = xla_flash_attention_seqsharded(q, k, v, causal=causal, ctx=ctx)
+        else:
+            o = xla_flash_attention(q, k, v, causal=causal)
+        if cache is not None:   # prefill fills the cache
+            C = cache["k"].shape[1]
+            kk, vv = k, v
+            if local and cfg.local_window and C < S:
+                kk, vv = k[:, -C:], v[:, -C:]
+            if "ks" in cache:                       # int8 quantized cache
+                kq, ksc = _kv_quant(kk)
+                vq, vsc = _kv_quant(vv)
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice_in_dim(
+                        cache["k"], kq, 0, axis=1),
+                    "v": jax.lax.dynamic_update_slice_in_dim(
+                        cache["v"], vq, 0, axis=1),
+                    "ks": jax.lax.dynamic_update_slice_in_dim(
+                        cache["ks"], ksc, 0, axis=1),
+                    "vs": jax.lax.dynamic_update_slice_in_dim(
+                        cache["vs"], vsc, 0, axis=1),
+                }
+            else:
+                new_cache = {
+                    "k": jax.lax.dynamic_update_slice_in_dim(
+                        cache["k"], kk.astype(cfg.adtype), 0, axis=1),
+                    "v": jax.lax.dynamic_update_slice_in_dim(
+                        cache["v"], vv.astype(cfg.adtype), 0, axis=1),
+                }
+    out = shard_act(o.reshape(B, S, H * hd) @ p["wo"], "btd")
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — compressed-latent attention with absorbed decode
+# ---------------------------------------------------------------------------
+
+def init_mla(cfg, key) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    qd = m.qk_nope_dim + m.qk_rope_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": common.dense_init(ks[0], d, H * qd, cfg.pdtype),
+        "wkv_a": common.dense_init(ks[1], d, m.kv_lora_rank + m.qk_rope_dim, cfg.pdtype),
+        "lnorm": common.init_rmsnorm(m.kv_lora_rank, cfg.pdtype),
+        "wkv_b": common.dense_init(ks[2], m.kv_lora_rank,
+                                   H * (m.qk_nope_dim + m.v_head_dim), cfg.pdtype),
+        "wo": common.dense_init(ks[3], H * m.v_head_dim, d, cfg.pdtype),
+    }
+
+
+def init_mla_cache(cfg, batch: int, cache_len: int) -> dict:
+    m = cfg.mla
+    return {"latent": jnp.zeros((batch, cache_len,
+                                 m.kv_lora_rank + m.qk_rope_dim), cfg.adtype)}
+
+
+def apply_mla(cfg, p, x: jax.Array, pos: jax.Array, *, mode: str,
+              cache: dict | None = None) -> tuple[jax.Array, dict | None]:
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.n_heads
+    qd = m.qk_nope_dim + m.qk_rope_dim
+
+    q = (x @ p["wq"]).reshape(B, S, H, qd)
+    q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+    q_rope = common.apply_rope(q_rope, pos, cfg.rope_theta)
+
+    ca = x @ p["wkv_a"]                                   # (B,S,lora+rope)
+    latent = common.rmsnorm(p["lnorm"], ca[..., :m.kv_lora_rank], cfg.norm_eps)
+    k_rope = common.apply_rope(ca[..., None, m.kv_lora_rank:], pos,
+                               cfg.rope_theta)            # (B,S,1,rope)
+
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, H, m.qk_nope_dim + m.v_head_dim)
+    w_uk = wkv_b[..., :m.qk_nope_dim]                     # (lora, H, nope)
+    w_uv = wkv_b[..., m.qk_nope_dim:]                     # (lora, H, v)
+
+    new_cache = cache
+    lat_ro = jnp.concatenate([latent, k_rope[:, :, 0]], axis=-1)
+    if mode == "decode":
+        assert cache is not None and S == 1
+        lat_cache = jax.lax.dynamic_update_slice(
+            cache["latent"], lat_ro.astype(cfg.adtype), (0, pos, 0))
+        new_cache = {"latent": lat_cache}
+        lc = lat_cache.astype(jnp.float32)
+        lat_c, rope_c = lc[..., :m.kv_lora_rank], lc[..., m.kv_lora_rank:]
+        # absorbed scores: q_nopeᵀ W_uk · latent  +  q_rope · k_rope
+        q_abs = jnp.einsum("bshn,lhn->bshl", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+        s = jnp.einsum("bshl,bcl->bshc", q_abs, lat_c)
+        s = s + jnp.einsum("bshr,bcr->bshc", q_rope.astype(jnp.float32), rope_c)
+        s = s * (qd ** -0.5)
+        C = lat_cache.shape[1]
+        valid = jnp.arange(C) < (pos + 1)
+        s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+        if cfg.attn_impl in ("sofa", "sofa_kernel"):
+            # SADS token selection on the latent scores (cheap K̂ = latent)
+            from repro.core import sads as sads_mod
+            k_tok = min(cfg.sofa.k_tokens(C), C)
+            n_seg = max(1, min(cfg.sofa.n_seg, C // max(cfg.sofa.seg_len, 1)))
+            res = sads_mod.sads_topk(s, k_tok, n_seg,
+                                     valid_mask=jnp.broadcast_to(
+                                         valid[None, None, None, :], s.shape))
+            s = jnp.where(res.mask, s, NEG_INF)
+        pw = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bshc,bcl->bshl", pw, lat_c)
+        o = jnp.einsum("bshl,lhv->bshv", o_lat, w_uv.astype(jnp.float32))
+    else:
+        k_nope = jnp.einsum("bsl,lhn->bshn", latent.astype(jnp.float32),
+                            w_uk.astype(jnp.float32))
+        vfull = jnp.einsum("bsl,lhv->bshv", latent.astype(jnp.float32),
+                           w_uv.astype(jnp.float32))
+        k = jnp.concatenate([k_nope, jnp.broadcast_to(
+            k_rope.astype(jnp.float32), (B, S, H, m.qk_rope_dim))], axis=-1)
+        qfull = jnp.concatenate([q_nope.astype(jnp.float32),
+                                 q_rope.astype(jnp.float32)], axis=-1)
+        if cfg.attn_impl in ("sofa", "sofa_kernel") and S > cfg.sofa.page:
+            o = sofa_prefill(qfull, k, vfull, cfg.sofa,
+                             use_kernel=cfg.attn_impl == "sofa_kernel")
+        else:
+            o = xla_flash_attention(qfull, k, vfull, causal=True)
+        if cache is not None:
+            new_cache = {"latent": jax.lax.dynamic_update_slice_in_dim(
+                cache["latent"], lat_ro.astype(cfg.adtype), 0, axis=1)}
+    out = o.reshape(B, S, H * m.v_head_dim).astype(x.dtype) @ p["wo"]
+    return out, new_cache

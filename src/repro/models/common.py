@@ -1,0 +1,148 @@
+"""Shared model primitives (functional, pytree-param style).
+
+Params are nested dicts of jnp arrays; every init_* returns a pytree and the
+matching apply_* consumes it.  All matmuls run in the config's activation
+dtype with f32 norm/softmax islands, matching production LM practice.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype):
+    return {"w": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["w"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, pos: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd), pos: (S,) or broadcastable — rotate pairs."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = pos.astype(jnp.float32)[..., None] * freqs    # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., None, :]                             # (..., S, 1, hd/2)
+    sin = sin[..., None, :]
+    x1, x2 = x[..., :hd // 2], x[..., hd // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def sinusoidal_pos(S: int, d: int) -> jax.Array:
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# activations & MLPs
+# ---------------------------------------------------------------------------
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":                 # nemotron squared-ReLU
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def init_mlp(key, d: int, d_ff: int, dtype, gated: bool):
+    ks = jax.random.split(key, 3)
+    p = {"wi": dense_init(ks[0], d, d_ff, dtype),
+         "wo": dense_init(ks[1], d_ff, d, dtype)}
+    if gated:
+        p["wg"] = dense_init(ks[2], d, d_ff, dtype)
+    return p
+
+
+def apply_mlp(p, x, act: str):
+    from repro.distributed.act_sharding import shard_act
+    h = shard_act(x @ p["wi"], "btf")
+    if "wg" in p:
+        h = activation(act)(shard_act(x @ p["wg"], "btf")) * h
+    else:
+        h = activation(act)(h)
+    return shard_act(h @ p["wo"], "btd")
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def chunked_softmax_xent(x: jax.Array, emb_t: jax.Array, labels: jax.Array,
+                         mask: jax.Array | None = None,
+                         chunk: int = 512, n_valid: int = 0) -> jax.Array:
+    """Cross-entropy without materializing full (B, S, V) logits.
+
+    x: (B, S, d) final hidden states; emb_t: (d, V) output head; labels:
+    (B, S) int32.  Scans over sequence chunks — the (B, chunk, V) logits are
+    transient (and rematerialized on backward), cutting peak activation
+    memory by S/chunk.
+    """
+    B, S, d = x.shape
+    chunk = min(chunk, S)
+    while S % chunk:          # largest divisor ≤ requested (VLM S = seq−P)
+        chunk -= 1
+    n = S // chunk
+
+    xs = x.reshape(B, n, chunk, d).swapaxes(0, 1)            # (n, B, c, d)
+    ls = labels.reshape(B, n, chunk).swapaxes(0, 1)
+    ms = (jnp.ones_like(labels) if mask is None else mask)
+    ms = ms.reshape(B, n, chunk).swapaxes(0, 1).astype(jnp.float32)
+
+    from repro.distributed.act_sharding import shard_act
+
+    V = emb_t.shape[-1]
+
+    def body(carry, inp):
+        xc, lc, mc = inp
+        logits = shard_act((xc @ emb_t).astype(jnp.float32), "btv")  # (B,c,V)
+        if n_valid and n_valid < V:      # mask vocab-padding columns
+            pad_ok = jnp.arange(V) < n_valid
+            logits = jnp.where(pad_ok, logits, -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        loss = (lse - gold) * mc
+        return (carry[0] + loss.sum(), carry[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (xs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)

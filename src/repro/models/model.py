@@ -1,0 +1,353 @@
+"""Unified model: embed → (prefix + scanned periods + suffix) blocks → head.
+
+One ``lax.scan`` over stacked period parameters keeps the HLO size constant
+in depth (94-layer Qwen3-MoE traces one period body).  Heterogeneous stacks
+(RecurrentGemma's R-R-A pattern) scan over whole periods; a remainder that
+doesn't fill a period is unrolled as suffix layers.
+
+Entry points:
+  init_model(cfg, key)                          → params
+  forward(cfg, params, tokens, embeds=...)      → hidden (B, S, d)
+  lm_loss(cfg, params, batch)                   → (loss, aux)    train core
+  init_caches(cfg, batch, cache_len)            → cache pytree
+  prefill(cfg, params, tokens, caches, ...)     → (last hidden, caches)
+  decode_step(cfg, params, caches, token, pos)  → (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, common, moe as moe_mod, recurrent
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _parse(kind: str) -> tuple[str, str]:
+    mixer, _, ffn = kind.partition("+")
+    return mixer, ffn
+
+
+def init_block(cfg, kind: str, key) -> dict:
+    mixer, ffn = _parse(kind)
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": common.init_rmsnorm(cfg.d_model, cfg.pdtype)}
+    if mixer in ("attn", "local_attn", "enc_attn"):
+        p["mix"] = attention.init_attention(cfg, ks[0])
+    elif mixer == "xattn":
+        p["mix"] = attention.init_attention(cfg, ks[0])
+        p["xmix"] = attention.init_attention(cfg, ks[3])
+        p["lnx"] = common.init_rmsnorm(cfg.d_model, cfg.pdtype)
+    elif mixer == "mla":
+        p["mix"] = attention.init_mla(cfg, ks[0])
+    elif mixer == "rglru":
+        p["mix"] = recurrent.init_rglru_block(cfg, ks[0])
+    elif mixer == "mamba":
+        p["mix"] = recurrent.init_mamba_block(cfg, ks[0])
+    else:
+        raise ValueError(mixer)
+    if ffn in ("mlp", "gmlp"):
+        p["ln2"] = common.init_rmsnorm(cfg.d_model, cfg.pdtype)
+        p["ffn"] = common.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.pdtype,
+                                   gated=(ffn == "gmlp"))
+    elif ffn == "moe":
+        p["ln2"] = common.init_rmsnorm(cfg.d_model, cfg.pdtype)
+        p["ffn"] = moe_mod.init_moe(cfg, ks[1])
+    elif ffn not in ("", "none"):
+        raise ValueError(ffn)
+    return p
+
+
+def init_block_cache(cfg, kind: str, batch: int, cache_len: int,
+                     enc_len: int = 0):
+    mixer, _ = _parse(kind)
+    if mixer == "attn":
+        return attention.init_kv_cache(cfg, batch, cache_len)
+    if mixer == "local_attn":
+        return attention.init_kv_cache(cfg, batch, cache_len, local=True)
+    if mixer == "xattn":
+        # cross K/V are overwritten at prefill from enc_out; pre-allocated so
+        # a decode-only graph (dry-run) has a complete cache structure.
+        return {"self": attention.init_kv_cache(cfg, batch, cache_len),
+                "cross": attention.init_kv_cache(cfg, batch,
+                                                 enc_len or cache_len)}
+    if mixer == "mla":
+        return attention.init_mla_cache(cfg, batch, cache_len)
+    if mixer == "rglru":
+        return recurrent.init_rglru_state(cfg, batch)
+    if mixer == "mamba":
+        return recurrent.init_mamba_state(cfg, batch)
+    raise ValueError(mixer)
+
+
+def apply_block(cfg, kind: str, p, x: jax.Array, pos, *, mode: str,
+                cache=None, enc_out: jax.Array | None = None,
+                training: bool = False):
+    """Returns (x, new_cache, aux_loss)."""
+    mixer, ffn = _parse(kind)
+    aux = jnp.zeros(())
+    h = common.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if mixer in ("attn", "local_attn", "enc_attn"):
+        o, cache = attention.apply_attention(
+            cfg, p["mix"], h, pos, mode=mode, cache=cache,
+            local=(mixer == "local_attn"), causal=(mixer != "enc_attn"))
+    elif mixer == "xattn":
+        sc = None if cache is None else cache["self"]
+        o, sc = attention.apply_attention(cfg, p["mix"], h, pos, mode=mode,
+                                          cache=sc, causal=True)
+        x = x + o
+        h2 = common.rmsnorm(p["lnx"], x, cfg.norm_eps)
+        o, cc = _cross_attention(cfg, p["xmix"], h2, enc_out, mode=mode,
+                                 cache=None if cache is None else cache["cross"])
+        cache = None if cache is None else {"self": sc, "cross": cc}
+    elif mixer == "rglru":
+        o, cache = recurrent.apply_rglru_block(cfg, p["mix"], h, mode=mode,
+                                               state=cache)
+    elif mixer == "mamba":
+        o, cache = recurrent.apply_mamba_block(cfg, p["mix"], h, mode=mode,
+                                               state=cache)
+    elif mixer == "mla":
+        o, cache = attention.apply_mla(cfg, p["mix"], h, pos, mode=mode,
+                                       cache=cache)
+    x = x + o
+    if ffn in ("mlp", "gmlp"):
+        h = common.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + common.apply_mlp(p["ffn"], h, cfg.act)
+    elif ffn == "moe":
+        h = common.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        o, aux = moe_mod.apply_moe(cfg, p["ffn"], h, cfg.act)
+        x = x + o
+    from repro.distributed.act_sharding import shard_act
+    # sequence-sharded block boundary for TRAINING only (Megatron-SP): the
+    # per-layer checkpointed residual is 1/tp the bytes.  Inference has no
+    # checkpoint stack — there the per-layer S↔heads resharding ping-pong
+    # costs ~5.7 GB/chip/layer of all-gathers (§Perf iter 9), so prefill
+    # and decode keep plain dp sharding.
+    kind = "btd_seq" if (training and mode != "decode"
+                         and x.shape[1] > 1) else "btd"
+    return shard_act(x, kind), cache, aux
+
+
+def _cross_attention(cfg, p, x, enc_out, *, mode: str, cache=None):
+    """Cross-attention re-uses the attention params layout; K/V come from the
+    encoder output (cached once at prefill)."""
+    B, S, d = x.shape
+    H, Kh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    if cache is not None and mode == "decode":
+        k, v = cache["k"], cache["v"]
+    else:
+        k = (enc_out @ p["wk"]).reshape(B, enc_out.shape[1], Kh, hd)
+        v = (enc_out @ p["wv"]).reshape(B, enc_out.shape[1], Kh, hd)
+        if mode != "decode":
+            cache = {"k": k.astype(cfg.adtype), "v": v.astype(cfg.adtype)}
+    if cfg.attn_impl in ("sofa", "sofa_kernel") and mode == "decode":
+        o = attention.sofa_decode(q, k, v, k.shape[1], cfg.sofa)
+    else:
+        o = attention.xla_flash_attention(q, k.astype(q.dtype),
+                                          v.astype(q.dtype), causal=False)
+    return o.reshape(B, S, H * hd) @ p["wo"], cache
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+
+def init_model(cfg, key) -> dict:
+    keys = jax.random.split(key, 8)
+    V = cfg.padded_vocab
+    params: dict[str, Any] = {
+        "embed": common.embed_init(keys[0], V, cfg.d_model, cfg.pdtype),
+        "lnf": common.init_rmsnorm(cfg.d_model, cfg.pdtype),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = common.dense_init(keys[1], cfg.d_model, V,
+                                           cfg.pdtype, scale=0.02)
+    # prefix
+    pk = jax.random.split(keys[2], max(1, len(cfg.prefix)))
+    params["prefix"] = [init_block(cfg, kind, pk[i])
+                        for i, kind in enumerate(cfg.prefix)]
+    # scanned periods (stacked along a leading layer axis)
+    n = cfg.scan_layers
+    if n:
+        period_keys = jax.random.split(keys[3], n)
+
+        def one_period(k):
+            kk = jax.random.split(k, len(cfg.period))
+            return {f"b{j}": init_block(cfg, kind, kk[j])
+                    for j, kind in enumerate(cfg.period)}
+
+        params["period"] = jax.vmap(one_period)(period_keys)
+    # suffix
+    sk = jax.random.split(keys[4], max(1, len(cfg.suffix)))
+    params["suffix"] = [init_block(cfg, kind, sk[i])
+                        for i, kind in enumerate(cfg.suffix)]
+    # encoder (enc-dec archs)
+    if cfg.encoder_layers:
+        ek = jax.random.split(keys[5], cfg.encoder_layers)
+        params["encoder"] = jax.vmap(
+            lambda k: init_block(cfg, "enc_attn+mlp", k))(ek)
+        params["enc_lnf"] = common.init_rmsnorm(cfg.d_model, cfg.pdtype)
+    # vision projector (vlm archs)
+    if cfg.family == "vlm":
+        params["vision_proj"] = {
+            "w1": common.dense_init(keys[6], cfg.vision_dim, cfg.d_model, cfg.pdtype),
+            "w2": common.dense_init(keys[7], cfg.d_model, cfg.d_model, cfg.pdtype),
+        }
+    return params
+
+
+def init_caches(cfg, batch: int, cache_len: int, enc_len: int = 0):
+    caches: dict[str, Any] = {
+        "prefix": [init_block_cache(cfg, kind, batch, cache_len, enc_len)
+                   for kind in cfg.prefix]}
+    n = cfg.scan_layers
+    if n:
+        one = {f"b{j}": init_block_cache(cfg, kind, batch, cache_len, enc_len)
+               for j, kind in enumerate(cfg.period)}
+        caches["period"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape).copy(), one)
+    caches["suffix"] = [init_block_cache(cfg, kind, batch, cache_len, enc_len)
+                        for kind in cfg.suffix]
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _run_blocks(cfg, params, x, pos, *, mode: str, caches=None, enc_out=None,
+                remat: bool = False, training: bool = False):
+    aux_total = jnp.zeros(())
+    new_caches: dict[str, Any] = {"prefix": [], "suffix": []}
+
+    for i, kind in enumerate(cfg.prefix):
+        c = None if caches is None else caches["prefix"][i]
+        x, c, aux = apply_block(cfg, kind, params["prefix"][i], x, pos,
+                                mode=mode, cache=c, enc_out=enc_out,
+                                training=training)
+        new_caches["prefix"].append(c)
+        aux_total += aux
+
+    if cfg.scan_layers:
+        def body(carry, scanned):
+            x, aux_acc = carry
+            pp = scanned[0]
+            cc = scanned[1] if caches is not None else None
+            ncc = {}
+            for j, kind in enumerate(cfg.period):
+                c = None if cc is None else cc[f"b{j}"]
+                x, c, aux = apply_block(cfg, kind, pp[f"b{j}"], x, pos,
+                                        mode=mode, cache=c, enc_out=enc_out,
+                                        training=training)
+                ncc[f"b{j}"] = c
+            out = ncc if caches is not None else 0
+            return (x, aux_acc + aux), out
+
+        body_fn = jax.checkpoint(body) if remat else body
+        xs = (params["period"], caches["period"]) if caches is not None \
+            else (params["period"],)
+        (x, aux_total), scan_out = jax.lax.scan(body_fn, (x, aux_total), xs)
+        if caches is not None:
+            new_caches["period"] = scan_out
+
+    for i, kind in enumerate(cfg.suffix):
+        c = None if caches is None else caches["suffix"][i]
+        x, c, aux = apply_block(cfg, kind, params["suffix"][i], x, pos,
+                                mode=mode, cache=c, enc_out=enc_out,
+                                training=training)
+        new_caches["suffix"].append(c)
+        aux_total += aux
+
+    return x, (new_caches if caches is not None else None), aux_total
+
+
+def encode(cfg, params, frames: jax.Array) -> jax.Array:
+    """Encoder stack (enc-dec archs). frames: (B, S_enc, d) stub embeddings."""
+    B, S, d = frames.shape
+    x = frames.astype(cfg.adtype) + common.sinusoidal_pos(S, d).astype(cfg.adtype)
+    pos = jnp.arange(S, dtype=jnp.int32)
+
+    def body(x, pp):
+        x, _, _ = apply_block(cfg, "enc_attn+mlp", pp, x, pos, mode="full")
+        return x, 0
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return common.rmsnorm(params["enc_lnf"], x, cfg.norm_eps)
+
+
+def embed_inputs(cfg, params, tokens: jax.Array,
+                 patches: jax.Array | None = None) -> jax.Array:
+    """Token embedding; VLM prepends projected patch embeddings."""
+    from repro.distributed.act_sharding import shard_act
+    x = shard_act(params["embed"][tokens].astype(cfg.adtype), "btd")
+    if patches is not None:
+        pe = patches.astype(cfg.adtype) @ params["vision_proj"]["w1"]
+        pe = jax.nn.gelu(pe.astype(jnp.float32)).astype(cfg.adtype)
+        pe = pe @ params["vision_proj"]["w2"]
+        x = shard_act(jnp.concatenate([pe, x], axis=1), "btd")
+    return x
+
+
+def forward(cfg, params, tokens: jax.Array, *, patches=None, enc_out=None,
+            caches=None, remat: bool = False, training: bool = False):
+    """Full-sequence forward → (hidden (B,S,d), new_caches, aux)."""
+    x = embed_inputs(cfg, params, tokens, patches)
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x, caches, aux = _run_blocks(cfg, params, x, pos, mode="full",
+                                 caches=caches, enc_out=enc_out, remat=remat,
+                                 training=training)
+    return common.rmsnorm(params["lnf"], x, cfg.norm_eps), caches, aux
+
+
+def logits_head(cfg, params, hidden: jax.Array) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = (hidden @ w).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab:    # mask vocab-padding columns
+        logits = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab,
+                           logits, -1e30)
+    return logits
+
+
+def head_matrix(cfg, params) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["head"]
+
+
+def lm_loss(cfg, params, batch: dict, *, remat: bool = True):
+    """Training loss.  batch: {"tokens", "labels", opt "patches"/"frames"}."""
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encode(cfg, params, batch["frames"])
+    hidden, _, aux = forward(cfg, params, batch["tokens"],
+                             patches=batch.get("patches"), enc_out=enc_out,
+                             remat=remat, training=True)
+    labels = batch["labels"]
+    if cfg.family == "vlm":   # patch positions carry no LM loss
+        P = hidden.shape[1] - labels.shape[1]
+        hidden = hidden[:, P:]
+    loss = common.chunked_softmax_xent(hidden, head_matrix(cfg, params),
+                                       labels, mask=batch.get("loss_mask"),
+                                       n_valid=cfg.vocab)
+    return loss + 0.01 * aux, {"xent": loss, "aux": aux}
+
+
+def prefill(cfg, params, tokens: jax.Array, caches, *, patches=None,
+            enc_out=None):
+    hidden, caches, _ = forward(cfg, params, tokens, patches=patches,
+                                enc_out=enc_out, caches=caches)
+    return logits_head(cfg, params, hidden[:, -1:]), caches
+
+
+def decode_step(cfg, params, caches, token: jax.Array, pos: jax.Array,
+                enc_out: jax.Array | None = None):
+    """token: (B, 1) int32, pos: scalar int32 → (logits (B,1,V), caches)."""
+    x = params["embed"][token].astype(cfg.adtype)
+    x, caches, _ = _run_blocks(cfg, params, x, pos, mode="decode",
+                               caches=caches, enc_out=enc_out)
+    x = common.rmsnorm(params["lnf"], x, cfg.norm_eps)
+    return logits_head(cfg, params, x), caches

@@ -1,0 +1,245 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (+ shared experts).
+
+Two dispatch paths:
+
+  * local (single device / tests): stable-argsort positions → capacity
+    scatter → (E, C, d) expert buffer.  No (T,E,C) one-hot.
+  * EP shard_map (production): under pjit, XLA partitions a global scatter
+    catastrophically (it rewrites it into a REPLICATED sort at (T·k, d) size
+    — the 160-GiB u32 buffers of EXPERIMENTS.md §Perf iter 0).  The
+    production path runs the dispatch MANUALLY inside shard_map: tokens
+    stay on their data shard, each model shard selects the tokens routed to
+    ITS experts (x is replicated over ``model``, so expert-local dispatch
+    needs no all-to-all), expert weights are FSDP-gathered over ``data``,
+    and the combine is one psum over ``model`` — the standard TPU EP
+    pattern.  Selected automatically when an activation-sharding mesh
+    context is installed.
+
+Over-capacity tokens drop (capacity-factor semantics); an aux
+load-balancing loss is returned for training.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import common
+
+
+def capacity(tokens: int, top_k: int, n_experts: int, factor: float) -> int:
+    c = int(tokens * top_k / n_experts * factor) + 1
+    return max(4, -(-c // 4) * 4)        # round up to a multiple of 4
+
+
+def init_moe(cfg, key) -> dict:
+    e = cfg.moe
+    d, de = cfg.d_model, e.d_expert
+    ks = jax.random.split(key, 5)
+    E = e.num_experts
+
+    def stack(k, din, dout):
+        return (jax.random.normal(k, (E, din, dout), jnp.float32)
+                * (din ** -0.5)).astype(cfg.pdtype)
+
+    p = {
+        "router": common.dense_init(ks[0], d, E, jnp.float32, scale=0.02),
+        "wi": stack(ks[1], d, de),
+        "wg": stack(ks[2], d, de),
+        "wo": stack(ks[3], de, d),
+    }
+    if e.num_shared:
+        p["shared"] = common.init_mlp(ks[4], d, de * e.num_shared, cfg.pdtype,
+                                      gated=True)
+    return p
+
+
+def apply_moe(cfg, p, x: jax.Array, act: str):
+    """x: (B, S, d) → (out (B, S, d), aux_loss scalar).  Dispatches to the
+    shard_map EP path when a mesh context is installed (production), else
+    the local scatter path (tests/single device)."""
+    from repro.distributed import act_sharding
+    ctx = act_sharding._CTX.get()
+    e = cfg.moe
+    if (ctx is not None and ctx["tp"] is not None
+            and e.num_experts % dict(zip(ctx["mesh"].axis_names,
+                                         ctx["mesh"].devices.shape))["model"] == 0):
+        return _apply_moe_ep(cfg, p, x, act, ctx)
+    return _apply_moe_local(cfg, p, x, act)
+
+
+def _apply_moe_local(cfg, p, x: jax.Array, act: str):
+    e = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, k = e.num_experts, e.top_k
+    C = capacity(T, k, E, e.capacity_factor)
+
+    from repro.distributed.act_sharding import shard_act
+
+    xt = shard_act(x.reshape(T, d), "td")
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, k)                      # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # position-within-expert via stable sort (no (T,E,C) one-hot)
+    flat_ids = shard_act(ids.reshape(-1), "td")              # (T·k,)
+    order = jnp.argsort(flat_ids, stable=True)
+    counts = jnp.bincount(flat_ids, length=E)
+    seg_start = jnp.cumsum(counts) - counts                  # (E,)
+    pos_sorted = jnp.arange(T * k, dtype=jnp.int32) - seg_start[flat_ids[order]]
+    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_sorted)
+
+    keep = pos < C
+    dest = jnp.where(keep, flat_ids * C + pos, E * C)        # sink slot E*C
+    dest = shard_act(dest, "td")
+
+    from repro.distributed.act_sharding import shard_act
+
+    tok_of = jnp.arange(T * k, dtype=jnp.int32) // k
+    buf = jnp.zeros((E * C + 1, d), x.dtype).at[dest].set(xt[tok_of])
+    expert_in = shard_act(buf[:E * C].reshape(E, C, d), "ecd")
+
+    h = jnp.einsum("ecd,edf->ecf", expert_in, p["wi"])
+    g = jnp.einsum("ecd,edf->ecf", expert_in, p["wg"])
+    h = common.activation(act)(g.astype(jnp.float32)).astype(h.dtype) * h
+    expert_out = shard_act(
+        jnp.einsum("ecf,efd->ecd", h, p["wo"]), "ecd")       # (E, C, d)
+
+    out_flat = jnp.concatenate(
+        [expert_out.reshape(E * C, d), jnp.zeros((1, d), x.dtype)], axis=0)
+    per_slot = out_flat[dest] * gate.reshape(-1)[:, None].astype(x.dtype)
+    out = per_slot.reshape(T, k, d).sum(axis=1)
+
+    if e.num_shared:
+        out = out + common.apply_mlp(p["shared"], xt, act)
+
+    # Switch-style load-balance aux loss
+    me = probs.mean(axis=0)                                  # (E,)
+    ce = jnp.zeros((E,)).at[flat_ids].add(1.0) / (T * k)
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# production EP path (shard_map)
+# ---------------------------------------------------------------------------
+
+def _apply_moe_ep(cfg, p, x: jax.Array, act: str, ctx):
+    from jax.experimental.shard_map import shard_map
+
+    e = cfg.moe
+    mesh = ctx["mesh"]
+    dp = ctx["dp"]                       # ("pod","data") tuple or "data"
+    dp_axes = dp if isinstance(dp, tuple) else ((dp,) if dp else ())
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ep = sizes["model"]
+    E, k, d = e.num_experts, e.top_k, cfg.d_model
+    E_loc = E // ep
+    B, S, _ = x.shape
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= sizes[a]
+    T_loc = (B // dp_size if B % dp_size == 0 else B) * S
+    C = capacity(T_loc, k, E, e.capacity_factor)
+
+    fsdp = d % sizes.get("data", 1) == 0 and "data" in sizes
+    x_spec = P(dp if B % dp_size == 0 and dp_size > 1 else None, None, None)
+    w_spec = P("model", "data", None) if fsdp else P("model", None, None)
+    wo_spec = P("model", None, "data") if fsdp else P("model", None, None)
+
+    def body(xb, router, wi, wg, wo):
+        mi = jax.lax.axis_index("model")
+        Bl, Sl, _ = xb.shape
+        Tl = Bl * Sl
+        xt = xb.reshape(Tl, d)
+        # Dispatch regime (§Perf iter 7): with many tokens (train/prefill)
+        # FSDP-gather the weights once and amortize; with few tokens
+        # (decode) the gather costs ≫ the matmul — keep weights sharded and
+        # move the (tiny) activations instead: d-sliced contraction + psum.
+        decode_regime = (Tl * k) <= 4096 and wi.shape[1] != d
+        if not decode_regime:
+            if wi.shape[1] != d:
+                wi = jax.lax.all_gather(wi, "data", axis=1, tiled=True)
+                wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+            if wo.shape[2] != d:
+                wo = jax.lax.all_gather(wo, "data", axis=2, tiled=True)
+
+        logits = xt.astype(jnp.float32) @ router             # (Tl, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, ids = jax.lax.top_k(probs, k)                  # (Tl, k)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+        flat_ids = ids.reshape(-1)
+        flat_gate = gate.reshape(-1)
+        tok_of = jnp.arange(Tl * k, dtype=jnp.int32) // k
+        # local slice of the expert range owned by this model shard
+        local = (flat_ids // E_loc) == mi
+        lid = jnp.where(local, flat_ids % E_loc, E_loc)      # E_loc = sink
+        order = jnp.argsort(lid, stable=True)
+        counts = jnp.bincount(lid, length=E_loc + 1)
+        seg = jnp.cumsum(counts) - counts
+        pos_sorted = jnp.arange(Tl * k, dtype=jnp.int32) - seg[lid[order]]
+        pos = jnp.zeros((Tl * k,), jnp.int32).at[order].set(pos_sorted)
+        keep = local & (pos < C)
+        dest = jnp.where(keep, lid * C + pos, E_loc * C)
+
+        # SLOT-granular dispatch: only (E_loc·C, d)-sized tensors are ever
+        # materialized — src-token ids and gates are scattered (1-D, cheap),
+        # the token features are GATHERED per slot, and the combine is one
+        # scatter-ADD back into (Tl, d).  An assignment-granular (Tl·k, d)
+        # formulation spawns multi-GiB u32 sort-scatter buffers under SPMD.
+        nslots = E_loc * C
+        src_tok = jnp.full((nslots + 1,), Tl, jnp.int32).at[dest].set(tok_of)
+        gate_slot = jnp.zeros((nslots + 1,), jnp.float32).at[dest].set(
+            jnp.where(keep, flat_gate, 0.0))
+        src_tok, gate_slot = src_tok[:nslots], gate_slot[:nslots]
+
+        xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], 0)
+        ein = xt_pad[src_tok].reshape(E_loc, C, d)
+        if decode_regime:
+            # tokens are data-sharded, so d-slice partials are only summable
+            # after every data shard sees ALL slots: gather the (tiny) slot
+            # buffers first, contract own d-slice, psum, then keep own rows.
+            di = jax.lax.axis_index("data")
+            dd = wi.shape[1]                       # d / data_size
+            ein_all = jax.lax.all_gather(ein, "data", axis=1, tiled=True)
+            ein_s = jax.lax.dynamic_slice_in_dim(ein_all, di * dd, dd, axis=2)
+            h = jax.lax.psum(jnp.einsum("ecd,edf->ecf", ein_s, wi), "data")
+            g = jax.lax.psum(jnp.einsum("ecd,edf->ecf", ein_s, wg), "data")
+            h = common.activation(act)(g.astype(jnp.float32)).astype(h.dtype) * h
+            part = jnp.einsum("ecf,efd->ecd", h, wo)   # (E_loc, C_all, d/dd)
+            eout_all = jax.lax.all_gather(part, "data", axis=2, tiled=True)
+            eout = jax.lax.dynamic_slice_in_dim(     # own slots back
+                eout_all, di * C, C, axis=1).reshape(nslots, d)
+        else:
+            h = jnp.einsum("ecd,edf->ecf", ein, wi)
+            g = jnp.einsum("ecd,edf->ecf", ein, wg)
+            h = common.activation(act)(g.astype(jnp.float32)).astype(h.dtype) * h
+            eout = jnp.einsum("ecf,efd->ecd", h, wo).reshape(nslots, d)
+        eout = eout * gate_slot[:, None].astype(eout.dtype)
+
+        out = jnp.zeros((Tl + 1, d), xb.dtype).at[src_tok].add(eout)[:Tl]
+        out = jax.lax.psum(out, "model")                     # combine shards
+
+        me = probs.mean(axis=0)
+        ce = jnp.zeros((E,)).at[flat_ids].add(1.0) / (Tl * k)
+        aux = E * jnp.sum(me * ce)
+        if dp_axes:
+            aux = jax.lax.pmean(aux, dp_axes if len(dp_axes) > 1 else dp_axes[0])
+        return out.reshape(Bl, Sl, d), aux
+
+    out, aux = shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, P(None, None), w_spec, w_spec, wo_spec),
+        out_specs=(x_spec, P()),
+        check_rep=False,
+    )(x, p["router"], p["wi"], p["wg"], p["wo"])
+
+    if e.num_shared:
+        out = out + common.apply_mlp(p["shared"], x.reshape(-1, d),
+                                     act).reshape(x.shape)
+    return out, aux

@@ -1,0 +1,259 @@
+"""Attention-free mixers: RG-LRU (RecurrentGemma/Griffin) and Mamba-2 SSD.
+
+Both are implemented TPU-natively: the RG-LRU linear recurrence uses
+``jax.lax.associative_scan`` (O(log S) depth), and Mamba-2 uses the chunked
+SSD dual form (intra-chunk quadratic on the MXU + inter-chunk state scan).
+Both expose O(1)-in-S decode state — which is why these two archs run the
+long_500k cell (DESIGN.md §4).  SOFA is inapplicable here (no QKᵀ score
+matrix); see DESIGN.md §Arch-applicability.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv (shared by both mixers)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array,
+                  state: jax.Array | None = None):
+    """x: (B, S, C), w: (W, C) depthwise.  state: (B, W-1, C) tail of the
+    previous segment (decode).  Returns (y, new_state)."""
+    W = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)            # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W))
+    new_state = xp[:, -(W - 1):] if W > 1 else pad
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def init_rglru_block(cfg, key) -> dict:
+    d = cfg.d_model
+    dr = cfg.rglru.d_rnn or d
+    ks = jax.random.split(key, 6)
+    # Λ init so that a = exp(-c·softplus(Λ)) starts near 0.9..0.99
+    lam = jnp.log(jnp.expm1(-jnp.log(
+        jax.random.uniform(ks[4], (dr,), jnp.float32, 0.9, 0.999)) / cfg.rglru.c_exponent))
+    return {
+        "w_gate": common.dense_init(ks[0], d, dr, cfg.pdtype),
+        "w_in": common.dense_init(ks[1], d, dr, cfg.pdtype),
+        "conv_w": (jax.random.normal(ks[2], (cfg.rglru.conv_width, dr), jnp.float32)
+                   * (cfg.rglru.conv_width ** -0.5)).astype(cfg.pdtype),
+        "w_r": common.dense_init(ks[3], dr, dr, cfg.pdtype),
+        "w_i": common.dense_init(ks[5], dr, dr, cfg.pdtype),
+        "lam": lam.astype(jnp.float32),
+        "w_out": common.dense_init(ks[0], dr, d, cfg.pdtype),
+    }
+
+
+def init_rglru_state(cfg, batch: int) -> dict:
+    dr = cfg.rglru.d_rnn or cfg.d_model
+    return {"conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, dr), cfg.adtype),
+            "h": jnp.zeros((batch, dr), jnp.float32)}
+
+
+def _rglru_core(p, u: jax.Array, c: float, h0: jax.Array | None):
+    """u: (B, S, dr) post-conv input.  Gated linear recurrence
+    h_t = a_t h_{t-1} + sqrt(1-a_t²)(i_t ⊙ u_t), via associative scan."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32))
+    log_a = -c * r * jax.nn.softplus(p["lam"])            # (B, S, dr), ≤ 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12, None)) * (i * uf)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)                  # fold in carry state
+
+    def comb(l, r_):
+        al, bl = l
+        ar, br = r_
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(comb, (a, b), axis=1)
+    return h                                              # (B, S, dr) f32
+
+
+def apply_rglru_block(cfg, p, x: jax.Array, *, mode: str,
+                      state: dict | None = None):
+    """Griffin recurrent block: gate branch ⊙ RG-LRU branch → out proj."""
+    c = cfg.rglru.c_exponent
+    gate = jax.nn.gelu((x @ p["w_gate"]).astype(jnp.float32))
+    u = x @ p["w_in"]
+    conv_state = None if state is None else state["conv"]
+    if mode == "decode":
+        u, new_conv = causal_conv1d(u, p["conv_w"].astype(u.dtype), conv_state)
+        h = _rglru_core_step(p, u[:, 0], c, state["h"])
+        new_state = {"conv": new_conv.astype(cfg.adtype), "h": h}
+        out = (h[:, None] * gate).astype(x.dtype) @ p["w_out"]
+        return out, new_state
+    u, new_conv = causal_conv1d(u, p["conv_w"].astype(u.dtype),
+                                conv_state if state is not None else None)
+    h0 = state["h"] if state is not None else None
+    h = _rglru_core(p, u, c, h0)
+    out = (h * gate).astype(x.dtype) @ p["w_out"]
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv.astype(cfg.adtype), "h": h[:, -1]}
+    return out, new_state
+
+
+def _rglru_core_step(p, u: jax.Array, c: float, h: jax.Array) -> jax.Array:
+    """Single-step recurrence for decode. u: (B, dr), h: (B, dr)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_r"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32))
+    a = jnp.exp(-c * r * jax.nn.softplus(p["lam"]))
+    return a * h + jnp.sqrt(jnp.clip(1 - a * a, 1e-12, None)) * (i * uf)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD — state-space duality, chunked)
+# ---------------------------------------------------------------------------
+
+def init_mamba_block(cfg, key) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 5)
+    return {
+        "w_in": common.dense_init(
+            ks[0], d, 2 * d_in + 2 * s.n_groups * s.d_state + nheads, cfg.pdtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch), jnp.float32)
+                   * (s.conv_width ** -0.5)).astype(cfg.pdtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "dd": jnp.ones((nheads,), jnp.float32),           # skip D
+        "norm": common.init_rmsnorm(d_in, cfg.pdtype),
+        "w_out": common.dense_init(ks[2], d_in, d, cfg.pdtype),
+    }
+
+
+def init_mamba_state(cfg, batch: int) -> dict:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), cfg.adtype),
+        "ssm": jnp.zeros((batch, nheads, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T) → (..., T, T) with out[i,j] = Σ_{j<t<=i} x_t (−inf above diag)."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a_log: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int, init_state: jax.Array | None = None):
+    """Chunked SSD (Mamba-2 dual form).
+
+    x: (b, s, h, p); dt: (b, s, h) (post-softplus); a_log: (h,) (A = −exp);
+    B, C: (b, s, n) (n_groups=1, shared across heads).
+    Returns (y (b,s,h,p), final_state (b,h,p,n)).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    A = -jnp.exp(a_log)                                  # (h,)
+    dA = dt * A                                          # (b, s, h) ≤ 0
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Ac = dA.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2)   # (b,h,c,l)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+    A_cum = jnp.cumsum(Ac, axis=-1)                      # (b,h,c,l)
+
+    xdt = xc * dtc[..., None]                            # dt folded into x once
+
+    # 1. intra-chunk (quadratic, MXU): Y_diag
+    L = jnp.exp(_segsum(Ac))                             # (b,h,c,l,l)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)       # (b,c,l,s)
+    Y_diag = jnp.einsum("bcls,bhcls,bcshp->bclhp", scores, L, xdt)
+
+    # 2. chunk states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)      # (b,h,c,l)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn", Bc, decay_states, xdt)
+
+    # 3. inter-chunk recurrence
+    A_chunk = A_cum[..., -1]                             # (b,h,c)
+    A_pad = jnp.pad(A_chunk, ((0, 0), (0, 0), (1, 0)))
+    decay_chunk = jnp.exp(_segsum(A_pad))                # (b,h,c+1,c+1)
+    if init_state is not None:
+        states = jnp.concatenate([init_state[:, None], states], axis=1)
+        new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk, states)
+    else:
+        new_states = jnp.einsum("bhzc,bchpn->bzhpn", decay_chunk[..., 1:], states)
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # 4. state → output
+    state_decay = jnp.exp(A_cum)                         # (b,h,c,l)
+    Y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", Cc, prev_states, state_decay)
+    y = (Y_diag + Y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def apply_mamba_block(cfg, p, x: jax.Array, *, mode: str,
+                      state: dict | None = None):
+    s = cfg.ssm
+    B_, S_, d = x.shape
+    d_in = s.expand * d
+    nheads = d_in // s.head_dim
+    n = s.n_groups * s.d_state
+
+    zxbcdt = x @ p["w_in"]
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in:d_in + d_in + 2 * n]
+    dt_raw = zxbcdt[..., -nheads:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+
+    conv_state = None if state is None else state["conv"]
+    xbc, new_conv = causal_conv1d(xbc, p["conv_w"].astype(xbc.dtype), conv_state)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32))
+    xin = xbc[..., :d_in].reshape(B_, S_, nheads, s.head_dim)
+    Bmat = xbc[..., d_in:d_in + n]
+    Cmat = xbc[..., d_in + n:]
+
+    if mode == "decode":
+        # single-step recurrence: state' = e^{dtA} state + dt·(B ⊗ x)
+        A = -jnp.exp(p["a_log"])
+        da = jnp.exp(dt[:, 0] * A)                        # (B, h)
+        upd = jnp.einsum("bn,bhp->bhpn", Bmat[:, 0], xin[:, 0] * dt[:, 0, :, None])
+        ssm = state["ssm"] * da[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", Cmat[:, 0], ssm)
+        y = y + p["dd"][None, :, None] * xin[:, 0]
+        y = y.reshape(B_, 1, d_in)
+        new_state = {"conv": new_conv.astype(cfg.adtype), "ssm": ssm}
+    else:
+        chunk = min(s.chunk, S_)
+        init_state = state["ssm"] if state is not None else None
+        y, fin = ssd_chunked(xin, dt, p["a_log"], Bmat, Cmat, chunk, init_state)
+        y = y + p["dd"][None, None, :, None] * xin
+        y = y.reshape(B_, S_, d_in)
+        new_state = None
+        if state is not None:
+            new_state = {"conv": new_conv.astype(cfg.adtype), "ssm": fin}
+
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = common.rmsnorm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    return y @ p["w_out"], new_state

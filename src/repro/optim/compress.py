@@ -1,0 +1,78 @@
+"""Gradient compression for the cross-pod (DCN) reduce.
+
+Two compressors, both with error feedback (residual carried to the next
+step so compression error doesn't bias the trajectory):
+
+  * int8 — per-tensor symmetric quantization: 4× fewer DCN bytes.
+  * topk — magnitude top-k sparsification (k fraction kept): k× fewer bytes
+    in index+value form; here modeled as masked dense for SPMD friendliness
+    (bytes accounting for the roofline uses the sparse form).
+
+Used by runtime/trainer.py around the pod-axis psum inside shard_map.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: Any
+
+
+def init_ef(grads_like: Any) -> EFState:
+    return EFState(residual=jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def int8_compress(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def topk_mask(g: jax.Array, k_frac: float) -> jax.Array:
+    flat = jnp.abs(g).reshape(-1)
+    k = max(1, int(k_frac * flat.size))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g) >= thresh).astype(g.dtype)
+
+
+def compress_grads(grads: Any, ef: EFState, method: str = "int8",
+                   k_frac: float = 0.05) -> tuple[Any, EFState, dict]:
+    """Returns (compressed-and-decompressed grads ready for the reduce,
+    new error-feedback state, byte-accounting stats)."""
+
+    sent_bytes = 0
+    raw_bytes = 0
+
+    def one(g, r):
+        nonlocal sent_bytes, raw_bytes
+        gf = g.astype(jnp.float32) + r
+        raw_bytes += g.size * 4
+        if method == "int8":
+            q, s = int8_compress(gf)
+            out = int8_decompress(q, s)
+            sent_bytes += g.size * 1 + 4
+        elif method == "topk":
+            m = topk_mask(gf, k_frac)
+            out = gf * m
+            sent_bytes += int(g.size * k_frac) * 8   # value + index
+        else:                                        # "none"
+            out = gf
+            sent_bytes += g.size * 4
+        return out, gf - out
+
+    pairs = jax.tree.map(one, grads, ef.residual)
+    out = jax.tree.map(lambda t: t[0], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    res = jax.tree.map(lambda t: t[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    stats = {"sent_bytes": sent_bytes, "raw_bytes": raw_bytes}
+    return out, EFState(residual=res), stats

@@ -1,0 +1,33 @@
+"""LR schedules: cosine, linear, and WSD (warmup-stable-decay, MiniCPM)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak: float, warmup: int, total: int,
+                  floor: float = 0.1, **_):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak * s / jnp.maximum(warmup, 1)
+    prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = peak * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def wsd(step, *, peak: float, warmup: int, stable: int, decay: int,
+        floor: float = 0.01, **_):
+    """MiniCPM's warmup-stable-decay: linear warmup, flat plateau, then a
+    short exponential decay to floor·peak."""
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak * s / jnp.maximum(warmup, 1)
+    t_decay = jnp.clip((s - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+    dec = peak * jnp.exp(jnp.log(floor) * t_decay)
+    out = jnp.where(s < warmup, warm, jnp.where(s < warmup + stable, peak, dec))
+    return out
+
+
+def constant(step, *, peak: float, **_):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), peak)
+
+
+def get(name: str):
+    return {"cosine": warmup_cosine, "wsd": wsd, "constant": constant}[name]

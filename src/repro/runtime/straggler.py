@@ -1,0 +1,76 @@
+"""Straggler detection & mitigation.
+
+At 1000+ nodes, slow hosts (thermal throttling, failing HBM, noisy
+neighbors) stretch every synchronous step.  The monitor keeps an EMA of
+step times, flags steps beyond ``threshold × EMA``, and drives a pluggable
+policy:
+
+  * "flag"    — record + report (default; feeds the ops dashboard)
+  * "skip"    — drop the straggling host's microbatch contribution
+                (gradient re-weighted by the trainer)
+  * "restart" — signal the launcher to evict/replace the node and resume
+                from the latest checkpoint (elastic path)
+
+On CPU simulation the detector is exercised with injected delays
+(tests/test_runtime.py); on a real cluster the same object consumes
+per-host step timings from the coordination service.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    ema: float
+    ratio: float
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, ema_alpha: float = 0.1,
+                 warmup_steps: int = 5,
+                 on_straggler: Callable[[StragglerEvent], None] | None = None):
+        self.threshold = threshold
+        self.alpha = ema_alpha
+        self.warmup = warmup_steps
+        self.ema: float | None = None
+        self.events: list[StragglerEvent] = []
+        self._n = 0
+        self._t0: float | None = None
+        self.on_straggler = on_straggler
+
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self, step: int) -> StragglerEvent | None:
+        assert self._t0 is not None, "start() not called"
+        dur = time.perf_counter() - self._t0
+        self._t0 = None
+        return self.observe(step, dur)
+
+    def observe(self, step: int, duration: float) -> StragglerEvent | None:
+        self._n += 1
+        if self.ema is None:
+            self.ema = duration
+            return None
+        is_straggler = (self._n > self.warmup and
+                        duration > self.threshold * self.ema)
+        ev = None
+        if is_straggler:
+            ev = StragglerEvent(step=step, duration=duration, ema=self.ema,
+                                ratio=duration / self.ema)
+            self.events.append(ev)
+            if self.on_straggler:
+                self.on_straggler(ev)
+            # a straggling step must not poison the EMA
+        else:
+            self.ema = (1 - self.alpha) * self.ema + self.alpha * duration
+        return ev
+
+    @property
+    def straggler_fraction(self) -> float:
+        return len(self.events) / max(1, self._n)

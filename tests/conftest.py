@@ -1,0 +1,11 @@
+import os
+import sys
+
+# tests must see the REAL single CPU device — never the dry-run's 512
+# placeholders (the dry-run sets its flag inside launch/dryrun.py only).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,227 @@
+"""Core SOFA algorithm behaviour (dlzs / sads / sufa / pipeline / rass / dse)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import complexity, dlzs, dse, numerics, pipeline, rass, sads, sufa
+
+
+@pytest.fixture(scope="module")
+def qkv():
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    S, d = 256, 64
+    return (jax.random.normal(kq, (S, d)) * 0.5,
+            jax.random.normal(kk, (S, d)) * 0.5,
+            jax.random.normal(kv, (S, d)))
+
+
+# ---------------------------------------------------------------------------
+# numerics / DLZS
+# ---------------------------------------------------------------------------
+
+def test_leading_zeros_matches_bitlength():
+    xs = jnp.array([0, 1, 2, 3, 127, -128, 64])
+    lz = numerics.leading_zeros(xs, 8)
+    expect = [8, 7, 6, 6, 1, 0, 1]   # |-128| = 0b10000000 → 0 leading zeros
+    np.testing.assert_array_equal(np.asarray(lz), expect)
+
+
+def test_pow2_quantize_within_octave():
+    x = jnp.linspace(-4, 4, 101)
+    sign, lz, scale = numerics.pow2_quantize(x, 8)
+    approx = sign * numerics.lz_decode_magnitude(lz, 8) * scale
+    nz = np.abs(np.asarray(x)) > 0.2
+    ratio = np.abs(np.asarray(approx))[nz] / np.abs(np.asarray(x))[nz]
+    assert (ratio > 0.4).all() and (ratio < 2.1).all()
+
+
+def test_dlzs_prediction_correlates(qkv):
+    q, k, _ = qkv
+    ahat = dlzs.predict_scores_from_kv(q, k)
+    exact = dlzs.exact_scores(q, k)
+    corr = np.corrcoef(np.asarray(ahat).ravel(), np.asarray(exact).ravel())[0, 1]
+    assert corr > 0.9
+
+
+def test_dlzs_ondemand_khat_close(qkv):
+    q, k, _ = qkv
+    wk = jax.random.normal(jax.random.PRNGKey(3), (64, 32)) * 0.2
+    lzw = dlzs.convert_weights(wk)
+    khat = dlzs.predict_khat(k, lzw)
+    exact = k @ wk
+    corr = np.corrcoef(np.asarray(khat).ravel(), np.asarray(exact).ravel())[0, 1]
+    assert corr > 0.85
+
+
+# ---------------------------------------------------------------------------
+# SADS
+# ---------------------------------------------------------------------------
+
+def test_sads_single_segment_is_global_topk(qkv):
+    q, k, _ = qkv
+    scores = dlzs.exact_scores(q, k)
+    res = sads.sads_topk(scores, 32, 1)
+    gmask = sads.global_topk_mask(scores, 32)
+    assert bool(jnp.all(res.mask == gmask))
+
+
+def test_sads_recall_reasonable(qkv):
+    q, k, _ = qkv
+    scores = dlzs.exact_scores(q, k)
+    rec = sads.recall_vs_global(scores, 64, 8)
+    assert float(rec.mean()) > 0.75
+
+
+def test_sads_respects_validity(qkv):
+    q, k, _ = qkv
+    scores = dlzs.exact_scores(q, k)
+    valid = jnp.arange(256)[None, :] <= jnp.arange(256)[:, None]
+    res = sads.sads_topk(scores, 32, 8, valid_mask=valid)
+    assert not bool(jnp.any(res.mask & ~valid))
+
+
+def test_iterative_topk_matches_lax(qkv):
+    q, k, _ = qkv
+    seg = dlzs.exact_scores(q, k)[:, :32]
+    vals, idx, _ = sads.iterative_segment_topk(seg, 4)
+    ref_v, ref_i = jax.lax.top_k(seg, 4)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(ref_v), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SU-FA
+# ---------------------------------------------------------------------------
+
+def test_sufa_exact_vs_softmax(qkv):
+    q, k, v = qkv
+    for seg in (16, 32, 64):
+        out = sufa.sufa_attention(q, k, v, seg_len=seg)
+        ref = sufa.softmax_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5)
+
+
+def test_sufa_sparse_matches_masked_dense(qkv):
+    q, k, v = qkv
+    scores = dlzs.exact_scores(q, k) * 64 ** -0.5
+    res = sads.sads_topk(scores, 64, 8)
+    out = sufa.sufa_attention_sparse(q, k, v, res.indices, res.n_seg)
+    ref = sufa.softmax_attention(q, k, v, mask=res.mask)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_full_k_equals_dense(qkv):
+    q, k, v = qkv
+    cfg = pipeline.SOFAConfig(k_frac=1.0, page=32, block_q=64)
+    out = pipeline.sofa_prefill_attention(q, k, v, cfg, causal=True)
+    ref = pipeline.dense_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_pipeline_sparse_close_to_dense(qkv):
+    q, k, v = qkv
+    cfg = pipeline.SOFAConfig(k_frac=0.5, page=32, block_q=64)
+    out = pipeline.sofa_prefill_attention(q, k, v, cfg, causal=True)
+    ref = pipeline.dense_attention(q, k, v, causal=True)
+    assert float(jnp.abs(out - ref).mean()) < 0.05
+
+
+def test_decode_full_k_equals_dense(qkv):
+    q, k, v = qkv
+    cfg = pipeline.SOFAConfig(k_frac=1.0, n_seg=4)
+    out = pipeline.sofa_decode_attention(q[0], k, v, cfg)
+    ref = sufa.softmax_attention(q[0][None], k, v)[0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_decode_respects_cache_len(qkv):
+    q, k, v = qkv
+    cfg = pipeline.SOFAConfig(k_frac=1.0, n_seg=4)
+    out = pipeline.sofa_decode_attention(q[0], k, v, cfg, cache_len=128)
+    ref = sufa.softmax_attention(q[0][None], k[:128], v[:128])[0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# complexity model (Fig. 5 / Fig. 17 shapes)
+# ---------------------------------------------------------------------------
+
+def test_fa2_exp_overhead_grows_with_tiles():
+    v = complexity.vanilla_softmax_row(2048)
+    fa_small = complexity.fa2_softmax_row(2048, 128)
+    fa_tiny = complexity.fa2_softmax_row(2048, 16)
+    assert fa_tiny.exp > fa_small.exp > v.exp * 0.99
+
+
+def test_sufa_cheaper_than_fa2_and_ascending():
+    su = complexity.sufa_row(512, 64).weighted()
+    asc = complexity.ascending_sufa_row(512, 64).weighted()
+    fa = complexity.fa2_softmax_row(512, 64).weighted()
+    assert su < asc < fa
+
+
+def test_dlzs_cheaper_than_mult_baseline():
+    base = complexity.precompute_baseline(2048, 64).weighted()
+    ours = complexity.precompute_dlzs(2048, 64).weighted()
+    assert ours < 0.5 * base
+
+
+def test_sads_fewer_comparisons():
+    assert complexity.topk_sads(2048, 512, 8).cmp < \
+        complexity.topk_vanilla(2048, 512).cmp
+
+
+# ---------------------------------------------------------------------------
+# RASS & DSE
+# ---------------------------------------------------------------------------
+
+def test_rass_beats_naive():
+    rng = np.random.default_rng(0)
+    sel = rng.random((16, 64)) < 0.25
+    r, n = rass.rass_vs_naive(sel, phase_size=4, buffer_keys=8)
+    assert r.fetches <= n.fetches
+    assert r.fetches >= r.distinct
+
+
+def test_dse_converges_on_quadratic():
+    choices = [np.arange(2, 34, 2, dtype=float)] * 2 + \
+        [np.arange(0.05, 0.55, 0.05)]
+
+    def f(x):
+        return float(((x[:-1] - 16) ** 2).sum() / 100 + 10 * (x[-1] - 0.25) ** 2)
+
+    res = dse.bayes_opt(f, choices, n_init=8, n_iter=20, pool=128, seed=0)
+    assert res.best_y < f(np.array([2.0, 32.0, 0.05]))
+    assert abs(res.best_x[-1] - 0.25) <= 0.15
+
+
+def test_ondemand_kv_matches_materialized(qkv):
+    """On-demand KV prefill (K/V projected only for selected pages) must
+    equal the materialize-first pipeline given the same selection inputs."""
+    q, _, _ = qkv
+    key = jax.random.PRNGKey(11)
+    S, H, hd = 256, 64, 64
+    x = jax.random.normal(key, (S, H)) * 0.5
+    wk = jax.random.normal(jax.random.PRNGKey(12), (H, hd)) * 0.15
+    wv = jax.random.normal(jax.random.PRNGKey(13), (H, hd)) * 0.15
+    wk_lz = dlzs.convert_weights(wk)
+
+    cfg = pipeline.SOFAConfig(k_frac=1.0, page=32, block_q=64, n_seg=2)
+    out = pipeline.sofa_ondemand_attention(x, q, wk, wv, wk_lz, cfg,
+                                           causal=True)
+    ref = pipeline.dense_attention(q, x @ wk, x @ wv, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4,
+                               rtol=2e-3)
+
+    # sparse: on-demand and materialize-first pick similar outputs
+    cfg2 = pipeline.SOFAConfig(k_frac=0.5, page=32, block_q=64, n_seg=2)
+    out2 = pipeline.sofa_ondemand_attention(x, q, wk, wv, wk_lz, cfg2,
+                                            causal=True)
+    assert float(jnp.abs(out2 - ref).mean()) < 0.1
+    assert pipeline.ondemand_flop_reduction(cfg2, S) == 0.5

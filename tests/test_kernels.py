@@ -1,0 +1,165 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import numerics
+from repro.core.pipeline import SOFAConfig
+from repro.kernels import ops, ref
+from repro.kernels.dlzs import dlzs_page_importance
+from repro.kernels.flash import flash_attention
+from repro.kernels.sufa import sufa_paged_attention
+from repro.kernels.topk import sads_topk
+
+
+def _qkv(seed, Sq, Sk, d, dv=None, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    return (jax.random.normal(kq, (Sq, d), dtype) * 0.5,
+            jax.random.normal(kk, (Sk, d), dtype) * 0.5,
+            jax.random.normal(kv, (Sk, dv or d), dtype))
+
+
+# ---------------------------------------------------------------------------
+# flash (FA-2 baseline)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Sq,Sk,d,bq,bk", [
+    (64, 64, 16, 16, 16),
+    (128, 256, 32, 32, 64),
+    (96, 96, 64, 32, 32),
+])
+@pytest.mark.parametrize("causal", [False, True])
+def test_flash_matches_ref(Sq, Sk, d, bq, bk, causal):
+    if causal and Sq != Sk:
+        pytest.skip("causal contract: aligned positions")
+    q, k, v = _qkv(0, Sq, Sk, d)
+    scale = d ** -0.5
+    out = flash_attention(q, k, v, block_q=bq, block_k=bk, scale=scale,
+                          causal=causal)
+    expect = ref.flash_attention_ref(q, k, v, scale, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=3e-5)
+
+
+def test_flash_dv_differs():
+    q, k, v = _qkv(1, 64, 64, 32, dv=16)
+    out = flash_attention(q, k, v, block_q=32, block_k=32,
+                          scale=32 ** -0.5, causal=False)
+    expect = ref.flash_attention_ref(q, k, v, 32 ** -0.5, False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# DLZS prediction kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Sq,Sk,d,page,bq", [
+    (64, 128, 16, 16, 16),
+    (128, 128, 32, 32, 64),
+])
+def test_dlzs_kernel_matches_ref(Sq, Sk, d, page, bq):
+    q, k, _ = _qkv(2, Sq, Sk, d)
+    qq, _ = numerics.quantize_int(q, 16)
+    kq, _ = numerics.quantize_int(k, 16)
+    imp = dlzs_page_importance(qq, kq, page=page, block_q=bq, scale=0.125)
+    expect = ref.dlzs_page_importance_ref(qq, kq, bq, page, 0.125)
+    np.testing.assert_allclose(np.asarray(imp), np.asarray(expect), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SU-FA paged kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("anchor_shift", [0.0, 3.0, -2.0])
+def test_sufa_paged_matches_ref(causal, anchor_shift):
+    q, k, v = _qkv(3, 128, 256, 32)
+    page, bq = 32, 32
+    page_idx = jnp.array([[0, 2, 4], [1, 3, 5], [0, 1, 2], [5, 6, 7]],
+                         jnp.int32)
+    anchor = jnp.full((4,), 1.0 + anchor_shift)
+    out = sufa_paged_attention(q, k, v, page_idx, anchor, page=page,
+                               block_q=bq, scale=32 ** -0.5, causal=causal)
+    expect = ref.sufa_paged_ref(q, k, v, page_idx, anchor, page,
+                                32 ** -0.5, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=3e-5)
+
+
+def test_sufa_anchor_robust():
+    """Output is invariant to the anchor (softmax shift invariance) — the
+    sorter's predicted max only guards the exp range (paper §IV-D)."""
+    q, k, v = _qkv(4, 64, 128, 32)
+    page_idx = jnp.array([[0, 1], [2, 3]], jnp.int32)
+    outs = []
+    for a in (0.0, 5.0, -5.0):
+        outs.append(np.asarray(sufa_paged_attention(
+            q, k, v, page_idx, jnp.full((2,), a), page=32, block_q=32,
+            scale=32 ** -0.5, causal=False)))
+    np.testing.assert_allclose(outs[0], outs[1], atol=1e-4)
+    np.testing.assert_allclose(outs[0], outs[2], atol=1e-4)
+
+
+def test_sufa_valid_mask_zeroes_padding():
+    q, k, v = _qkv(5, 64, 128, 32)
+    idx = jnp.array([[0, 1], [2, 2]], jnp.int32)        # duplicate slot
+    valid = jnp.array([[1, 1], [1, 0]], jnp.int32)      # second is padding
+    out = sufa_paged_attention(q, k, v, idx, jnp.zeros((2,)), valid,
+                               page=32, block_q=32, scale=32 ** -0.5,
+                               causal=False)
+    # block 1 must equal single-page attention over page 2 only (the
+    # duplicated slot is flagged invalid and must contribute nothing)
+    ref_b1 = ref.sufa_paged_ref(q[32:], k, v, jnp.array([[2]]),
+                                jnp.zeros((1,)), 32, 32 ** -0.5, False)
+    np.testing.assert_allclose(np.asarray(out)[32:], np.asarray(ref_b1),
+                               atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# SADS top-k kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,S,n_seg,k_seg,br", [
+    (16, 128, 4, 4, 8),
+    (8, 64, 2, 8, 4),
+    (32, 256, 8, 2, 8),
+])
+def test_topk_kernel_matches_ref(R, S, n_seg, k_seg, br):
+    scores = jax.random.normal(jax.random.PRNGKey(6), (R, S))
+    vals, idx = sads_topk(scores, k_seg=k_seg, n_seg=n_seg, block_rows=br)
+    ref_v, ref_i = ref.sads_topk_ref(scores, k_seg, n_seg)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(ref_v), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(idx), np.asarray(ref_i))
+
+
+def test_topk_kernel_clipping_keeps_top1():
+    """Aggressive clipping may drop tail values but never the segment max."""
+    scores = jax.random.normal(jax.random.PRNGKey(7), (8, 64))
+    vals, idx = sads_topk(scores, k_seg=4, n_seg=2, block_rows=8,
+                          clip_margin=0.5)
+    ref_v, _ = ref.sads_topk_ref(scores, 4, 2)
+    np.testing.assert_allclose(np.asarray(vals)[:, 0], np.asarray(ref_v)[:, 0],
+                               rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(vals)[:, 4], np.asarray(ref_v)[:, 4],
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused pipeline op
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [False, True])
+def test_fused_sofa_full_k_equals_flash(causal):
+    q, k, v = _qkv(8, 128, 128, 32)
+    cfg = SOFAConfig(k_frac=1.0, page=32, block_q=32, interpret=True)
+    out = ops.sofa_attention_kernel(q, k, v, cfg, causal=causal)
+    expect = ref.flash_attention_ref(q, k, v, 32 ** -0.5, causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=3e-5)
+
+
+def test_fused_sofa_sparse_close():
+    q, k, v = _qkv(9, 128, 128, 32)
+    cfg = SOFAConfig(k_frac=0.5, page=32, block_q=32, interpret=True)
+    out = ops.sofa_attention_kernel(q, k, v, cfg, causal=True)
+    expect = ref.flash_attention_ref(q, k, v, 32 ** -0.5, True)
+    assert float(np.abs(np.asarray(out) - np.asarray(expect)).mean()) < 0.05

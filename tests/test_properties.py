@@ -1,0 +1,102 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import numerics, rass, sads, sufa
+
+_settings = settings(max_examples=25, deadline=None)
+
+
+@given(st.integers(0, 2 ** 31), st.integers(1, 16),
+       st.sampled_from([1, 2, 4, 8]))
+@_settings
+def test_sads_mask_cardinality(seed, k_total, n_seg):
+    """SADS selects exactly n_seg·ceil(k/n_seg) keys (≥ k, ≤ k + n_seg)."""
+    rng = np.random.default_rng(seed)
+    S = 64
+    scores = jnp.asarray(rng.standard_normal((3, S)), jnp.float32)
+    k_total = min(k_total, S // n_seg)
+    res = sads.sads_topk(scores, k_total, n_seg)
+    count = int(res.mask.sum(-1)[0])
+    assert k_total <= count <= k_total + n_seg
+    assert count == res.n_seg * res.k_seg
+
+
+@given(st.integers(0, 2 ** 31))
+@_settings
+def test_sads_type1_always_captures_spike(seed):
+    """Type-I distributions (dominant spikes): SADS always captures the
+    global max — the DCE guarantee of paper Fig. 9(a)."""
+    rng = np.random.default_rng(seed)
+    S = 64
+    scores = rng.standard_normal(S) * 0.1
+    spike = rng.integers(0, S)
+    scores[spike] = 10.0
+    res = sads.sads_topk(jnp.asarray(scores, jnp.float32)[None], 8, 4)
+    assert bool(res.mask[0, spike])
+
+
+@given(st.integers(0, 2 ** 31), st.sampled_from([2, 4, 8]))
+@_settings
+def test_sads_monotone_in_k(seed, n_seg):
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.standard_normal((1, 64)), jnp.float32)
+    small = sads.sads_topk(scores, 8, n_seg).mask
+    large = sads.sads_topk(scores, 16, n_seg).mask
+    assert not bool(jnp.any(small & ~large))
+
+
+@given(st.integers(0, 2 ** 31), st.floats(-20, 20))
+@_settings
+def test_sufa_shift_invariance(seed, shift):
+    """Softmax attention output is invariant to a constant score shift —
+    the property that makes SU-FA's sorter-provided anchor correctness-free."""
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((32, 16)), jnp.float32)
+    a = sufa.sufa_attention(q, k, v, seg_len=8)
+    b = sufa.sufa_attention(q + 0, k, v, seg_len=8, scale=16 ** -0.5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    # explicit shift through tile partials
+    parts = sufa.tile_partials(q, k, v, 8)
+    shifted = sufa.TilePartial(m=parts.m + shift, l=parts.l, o=parts.o)
+    np.testing.assert_allclose(np.asarray(sufa.combine(parts)),
+                               np.asarray(sufa.combine(shifted)), atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 31), st.sampled_from([4, 8, 16]))
+@_settings
+def test_quantize_roundtrip_bound(seed, width):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(64) * 3, jnp.float32)
+    q, scale = numerics.quantize_int(x, width)
+    err = np.abs(np.asarray(q * scale - x))
+    assert err.max() <= float(scale) * 0.5 + 1e-6
+
+
+@given(st.integers(0, 2 ** 31))
+@_settings
+def test_rass_fetches_bounded(seed):
+    rng = np.random.default_rng(seed)
+    sel = rng.random((8, 32)) < 0.3
+    if not sel.any():
+        return
+    r, n = rass.rass_vs_naive(sel, phase_size=4, buffer_keys=8)
+    assert r.distinct <= r.fetches <= n.fetches
+    assert n.fetches <= n.total_demand
+
+
+@given(st.integers(0, 2 ** 31), st.sampled_from([1, 2, 4]))
+@_settings
+def test_sads_segment_grouping_indices_in_range(seed, n_seg):
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.standard_normal((2, 32)), jnp.float32)
+    res = sads.sads_topk(scores, 8, n_seg)
+    seg_len = 32 // n_seg
+    idx = np.asarray(res.indices).reshape(2, n_seg, res.k_seg)
+    for j in range(n_seg):
+        assert (idx[:, j] >= j * seg_len).all()
+        assert (idx[:, j] < (j + 1) * seg_len).all()

@@ -1,0 +1,77 @@
+"""HLO analyzer validation: trip-count-scaled costs vs known programs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline import hlo_analysis as H
+
+M = 128
+
+
+def _compile(fn, *specs):
+    return jax.jit(fn).lower(*specs).compile()
+
+
+def test_scan_flops_match_unrolled():
+    a = jax.ShapeDtypeStruct((M, M), jnp.float32)
+    w = jax.ShapeDtypeStruct((12, M, M), jnp.float32)
+
+    def scanned(a, w):
+        return jax.lax.scan(lambda x, wi: (x @ wi, 0), a, w)[0]
+
+    def unrolled(a, w):
+        x = a
+        for i in range(12):
+            x = x @ w[i]
+        return x
+
+    fs = H.analyze(_compile(scanned, a, w).as_text())["flops"]
+    fu = H.analyze(_compile(unrolled, a, w).as_text())["flops"]
+    expect = 12 * 2 * M ** 3
+    assert abs(fs - expect) / expect < 0.01
+    assert abs(fu - expect) / expect < 0.01
+
+
+def test_nested_scan_multiplies():
+    a = jax.ShapeDtypeStruct((M, M), jnp.float32)
+    w = jax.ShapeDtypeStruct((M, M), jnp.float32)
+
+    def nested(a, w):
+        def outer(x, _):
+            def inner(y, _):
+                return y @ w, 0
+            y, _ = jax.lax.scan(inner, x, None, length=3)
+            return y, 0
+        return jax.lax.scan(outer, a, None, length=4)[0]
+
+    f = H.analyze(_compile(nested, a, w).as_text())["flops"]
+    expect = 12 * 2 * M ** 3
+    assert abs(f - expect) / expect < 0.01
+
+
+def test_bytes_positive_and_scale_with_trips():
+    a = jax.ShapeDtypeStruct((M, M), jnp.float32)
+
+    def loop(a, n):
+        def body(x, _):
+            return jnp.tanh(x), 0
+        return jax.lax.scan(body, a, None, length=n)[0]
+
+    b2 = H.analyze(_compile(lambda a: loop(a, 2), a).as_text())["bytes"]
+    b8 = H.analyze(_compile(lambda a: loop(a, 8), a).as_text())["bytes"]
+    assert b8 > 2.5 * b2 > 0
+
+
+def test_dot_flops_with_batch_dims():
+    x = jax.ShapeDtypeStruct((4, M, 64), jnp.float32)
+    y = jax.ShapeDtypeStruct((4, 64, 32), jnp.float32)
+    f = H.analyze(_compile(lambda a, b: jnp.einsum("bij,bjk->bik", a, b),
+                           x, y).as_text())["flops"]
+    expect = 2 * 4 * M * 64 * 32
+    assert abs(f - expect) / expect < 0.01
+
+
+def test_collectives_absent_on_single_device():
+    a = jax.ShapeDtypeStruct((M, M), jnp.float32)
+    r = H.analyze(_compile(lambda a: a @ a, a).as_text())
+    assert r["collective"]["ici"] == 0 and r["collective"]["dcn"] == 0

@@ -1,0 +1,149 @@
+"""Runtime substrate: checkpointing, fault tolerance, straggler, data."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.reduced import reduced
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.straggler import StragglerMonitor
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manager
+# ---------------------------------------------------------------------------
+
+def test_ckpt_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"a": jnp.arange(6.0).reshape(2, 3), "b": [jnp.ones(4)]}
+    mgr.save(3, state)
+    out = mgr.restore(3, state)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(state["a"]))
+
+
+def test_ckpt_keep_n_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    state = {"x": jnp.zeros(2)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, state)
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_ckpt_async_then_wait(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save_async(7, {"x": jnp.full(8, 7.0)})
+    mgr.wait()
+    out = mgr.restore(7, {"x": jnp.zeros(8)})
+    assert float(out["x"][0]) == 7.0
+
+
+def test_ckpt_atomic_no_tmp_left(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"x": jnp.zeros(2)})
+    assert not any(n.endswith(".tmp") for n in os.listdir(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# data pipeline determinism
+# ---------------------------------------------------------------------------
+
+def test_data_is_pure_function_of_step():
+    cfg = reduced("minicpm-2b")
+    d1 = SyntheticLM(cfg, 4, 32, DataConfig(seed=5))
+    d2 = SyntheticLM(cfg, 4, 32, DataConfig(seed=5))
+    np.testing.assert_array_equal(d1(9)["tokens"], d2(9)["tokens"])
+    assert not np.array_equal(d1(9)["tokens"], d1(10)["tokens"])
+
+
+def test_data_has_learnable_structure():
+    cfg = reduced("minicpm-2b")
+    d = SyntheticLM(cfg, 8, 64)
+    b = d(0)
+    toks = b["tokens"]
+    # repeats injected → shifted self-agreement above chance
+    agree = (toks[:, 8:] == toks[:, :-8]).mean()
+    assert agree > 3.0 / cfg.vocab
+
+
+# ---------------------------------------------------------------------------
+# straggler monitor
+# ---------------------------------------------------------------------------
+
+def test_straggler_detected_and_ema_protected():
+    mon = StragglerMonitor(threshold=2.0, warmup_steps=2)
+    for s in range(8):
+        mon.observe(s, 0.10)
+    ema_before = mon.ema
+    ev = mon.observe(8, 0.50)
+    assert ev is not None and ev.ratio > 2.0
+    assert abs(mon.ema - ema_before) < 1e-9     # spike didn't poison EMA
+    assert mon.observe(9, 0.11) is None
+
+
+# ---------------------------------------------------------------------------
+# trainer: fault tolerance + resume determinism
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = reduced("minicpm-2b")
+    mesh = make_host_mesh(data=1, model=1)
+    return cfg, mesh
+
+
+def _params_digest(params):
+    return np.concatenate([np.asarray(l, np.float64).ravel()[:16]
+                           for l in jax.tree.leaves(params)])
+
+
+def test_trainer_crash_resume_reproduces_trajectory(tmp_path, tiny_setup):
+    cfg, mesh = tiny_setup
+    steps = 8
+
+    # uninterrupted run
+    t_ref = Trainer(cfg, mesh, batch=2, seq=32,
+                    tcfg=TrainerConfig(steps=steps, ckpt_dir=str(tmp_path / "a"),
+                                       ckpt_every=2, log_every=100),
+                    log_fn=lambda s: None)
+    ref = t_ref.run()
+
+    # crash at step 5, then restart the same command
+    tc = TrainerConfig(steps=steps, ckpt_dir=str(tmp_path / "b"),
+                       ckpt_every=2, log_every=100)
+    t1 = Trainer(cfg, mesh, batch=2, seq=32, tcfg=tc, log_fn=lambda s: None)
+    with pytest.raises(RuntimeError, match="injected failure"):
+        t1.run(fail_at=5)
+    t2 = Trainer(cfg, mesh, batch=2, seq=32, tcfg=tc, log_fn=lambda s: None)
+    res = t2.run()
+
+    np.testing.assert_allclose(_params_digest(res["params"]),
+                               _params_digest(ref["params"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_trainer_loss_decreases(tmp_path, tiny_setup):
+    cfg, mesh = tiny_setup
+    t = Trainer(cfg, mesh, batch=4, seq=32,
+                tcfg=TrainerConfig(steps=12, ckpt_dir=str(tmp_path / "c"),
+                                   ckpt_every=100, peak_lr=5e-3, warmup=2,
+                                   log_every=100),
+                log_fn=lambda s: None)
+    out = t.run()
+    assert np.mean(out["history"][-3:]) < np.mean(out["history"][:3])
+
+
+def test_trainer_grad_compression_still_learns(tmp_path, tiny_setup):
+    cfg, mesh = tiny_setup
+    t = Trainer(cfg, mesh, batch=4, seq=32,
+                tcfg=TrainerConfig(steps=12, ckpt_dir=str(tmp_path / "d"),
+                                   ckpt_every=100, peak_lr=5e-3, warmup=2,
+                                   compress="int8", log_every=100),
+                log_fn=lambda s: None)
+    out = t.run()
+    assert np.mean(out["history"][-3:]) < np.mean(out["history"][:3])
